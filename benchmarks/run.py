@@ -1,0 +1,232 @@
+"""Benchmark harness — one benchmark per paper claim/figure plus kernel
+micro-benches and the roofline table.  Prints ``name,us_per_call,derived``
+CSV rows (derived = the claim-relevant figure of merit).
+
+  r1_dataset_reduction   R1: tokenize+pack ahead of time (paper: 2TB->25GB)
+  r2_staging             R2: node-local staging beats contended network FS
+  r3_loader_workers      R3: loader worker count vs utilization
+  fig1_dp_scaling        Fig. 1: samples/s vs worker count (120M & 350M)
+  r5_batch_vs_model      R5: max per-GPU batch 184 (120M) vs 20 (350M)
+  mlm_train_step         measured train-step time of the paper's model (CPU)
+  kernel_*               Pallas kernels (interpret mode) vs jnp oracle
+  roofline_table         aggregated dry-run roofline terms (if present)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import tempfile
+import time
+
+ROW = "{name},{us:.1f},{derived}"
+
+
+def _t(fn, n=3):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_r1_dataset_reduction(tmp):
+    from repro.data import (ByteBPETokenizer, pack_corpus, read_raw_corpus,
+                            size_reduction, write_raw_corpus)
+
+    raw = os.path.join(tmp, "raw.jsonl")
+    t0 = time.perf_counter()
+    nbytes = write_raw_corpus(raw, 1500, seed=0)
+    fns = list(read_raw_corpus(raw))
+    tok = ByteBPETokenizer.train(fns[:60], max_merges=300)
+    shards = pack_corpus(iter(fns), tok, os.path.join(tmp, "packed"),
+                         seq_len=512)
+    us = (time.perf_counter() - t0) * 1e6
+    red = size_reduction(nbytes, shards)
+    print(ROW.format(name="r1_dataset_reduction", us=us,
+                     derived=f"reduction={red*100:.1f}%_paper=99%"))
+    return shards
+
+
+def bench_r2_staging(tmp, shards):
+    from repro.data import NetworkFS, StagedDataset, measure_throughput
+
+    net = StagedDataset(list(shards),
+                        network=NetworkFS(agg_bw=2e9, readers=128))
+    m_net = measure_throughput(net, 64, 2, n_batches=40)
+    local = StagedDataset(list(shards),
+                          network=NetworkFS(agg_bw=2e9, readers=128),
+                          local_dir=os.path.join(tmp, "local"))
+    stage_s = local.stage()
+    m_loc = measure_throughput(local, 64, 2, n_batches=40)
+    speed = m_loc["samples_per_s"] / max(m_net["samples_per_s"], 1e-9)
+    print(ROW.format(name="r2_staging", us=stage_s * 1e6,
+                     derived=f"staged_speedup={speed:.2f}x"))
+
+
+def bench_r3_loader_workers(tmp, shards):
+    from repro.data import StagedDataset, tune_workers
+
+    ds = StagedDataset(list(shards))
+    t0 = time.perf_counter()
+    out = tune_workers(ds, 64, step_time_s=0.003, max_workers=4,
+                       target_util=0.9, n_batches=25)
+    us = (time.perf_counter() - t0) * 1e6
+    hist = ";".join(f"w{h['n_workers']}:util={h['utilization']:.2f}"
+                    for h in out["history"])
+    print(ROW.format(name="r3_loader_workers", us=us,
+                     derived=f"chosen={out['chosen']}_{hist}"))
+
+
+def bench_fig1_dp_scaling():
+    from repro.configs import get_config
+    from repro.core import H100_NVL, TPU_V5E, dp_scaling_curve
+
+    t0 = time.perf_counter()
+    rows = []
+    for arch, b in (("bert-mlm-120m", 184), ("bert-mlm-350m", 20)):
+        cfg = get_config(arch)
+        curve = dp_scaling_curve(cfg, per_dev_batch=b, chip=H100_NVL,
+                                 seq=512)
+        rows.append(f"{arch}:eff@256={curve[256]['efficiency']:.2f}")
+        tcurve = dp_scaling_curve(cfg, per_dev_batch=b, chip=TPU_V5E,
+                                  seq=512)
+        rows.append(f"{arch}-v5e:eff@256={tcurve[256]['efficiency']:.2f}")
+    us = (time.perf_counter() - t0) * 1e6
+    print(ROW.format(name="fig1_dp_scaling", us=us,
+                     derived="_".join(rows) + "_paper=near-linear"))
+
+
+def bench_r5_batch_vs_model():
+    from repro.configs import get_config
+    from repro.core import H100_NVL, MemoryModel
+
+    t0 = time.perf_counter()
+    b = {}
+    for arch in ("bert-mlm-120m", "bert-mlm-350m"):
+        mm = MemoryModel(get_config(arch), act_factor=150.0)
+        b[arch] = mm.max_batch(512, H100_NVL.hbm_bytes)
+    us = (time.perf_counter() - t0) * 1e6
+    ratio = b["bert-mlm-120m"] / max(1, b["bert-mlm-350m"])
+    print(ROW.format(
+        name="r5_batch_vs_model", us=us,
+        derived=(f"b120={b['bert-mlm-120m']}_b350={b['bert-mlm-350m']}"
+                 f"_ratio={ratio:.1f}_paper=184/20=9.2")))
+
+
+def bench_mlm_train_step():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.train_step import init_state, make_train_step
+
+    cfg = reduced(get_config("bert-mlm-120m"), d_model=256)
+    model = build_model(cfg)
+    B, S = 8, 128
+    run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                    sharding="ddp", param_dtype="float32",
+                    activation_dtype="float32")
+    step = jax.jit(make_train_step(model, run, AdamWConfig()))
+    state = init_state(model, jax.random.PRNGKey(0), run)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 4,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks,
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    state_box = [state]
+
+    def one():
+        s, m = step(state_box[0], batch)
+        jax.block_until_ready(m["loss"])
+        state_box[0] = s
+
+    us = _t(one, n=3)
+    tok_s = B * S / (us / 1e6)
+    print(ROW.format(name="mlm_train_step", us=us,
+                     derived=f"tokens_per_s={tok_s:.0f}_cpu_host"))
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.kernels.fused_xent import fused_xent
+    from repro.kernels.ssd_scan import ssd_scan
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    us = _t(lambda: jax.block_until_ready(
+        flash_attention_fwd(q, k, v, causal=True)))
+    err = float(jnp.abs(flash_attention_fwd(q, k, v, causal=True)
+                        - ref.flash_attention_ref(q, k, v, causal=True)).max())
+    print(ROW.format(name="kernel_flash_attention_interp", us=us,
+                     derived=f"maxerr={err:.1e}"))
+
+    x = jax.random.normal(ks[3], (1, 256, 4, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (1, 256, 4)))
+    A = -jnp.exp(jax.random.normal(ks[5], (4,)) * 0.5)
+    Bm = jax.random.normal(ks[6], (1, 256, 1, 16))
+    Cm = jax.random.normal(ks[7], (1, 256, 1, 16))
+    us = _t(lambda: jax.block_until_ready(
+        ssd_scan(x, dt, A, Bm, Cm, chunk=64)[0]))
+    e = float(jnp.abs(ssd_scan(x, dt, A, Bm, Cm, chunk=64)[0]
+                      - ref.ssd_ref(x, dt, A, Bm, Cm, chunk=64)[0]).max())
+    print(ROW.format(name="kernel_ssd_scan_interp", us=us,
+                     derived=f"maxerr={e:.1e}"))
+
+    logits = jax.random.normal(ks[0], (512, 4096))
+    labels = jax.random.randint(ks[1], (512,), 0, 4096)
+    us = _t(lambda: jax.block_until_ready(fused_xent(logits, labels)))
+    e = float(jnp.abs(fused_xent(logits, labels)
+                      - ref.xent_ref(logits, labels)).max())
+    print(ROW.format(name="kernel_fused_xent_interp", us=us,
+                     derived=f"maxerr={e:.1e}"))
+
+
+def bench_roofline_table():
+    recs = []
+    for p in sorted(glob.glob("experiments/dryrun/*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if "t_compute" in r:
+            recs.append(r)
+    if not recs:
+        print(ROW.format(name="roofline_table", us=0,
+                         derived="no_dryrun_records_yet"))
+        return
+    n_mem = sum(1 for r in recs if r["dominant"] == "memory")
+    n_cmp = sum(1 for r in recs if r["dominant"] == "compute")
+    n_col = sum(1 for r in recs if r["dominant"] == "collective")
+    fits = sum(1 for r in recs if r["fits_hbm"])
+    print(ROW.format(
+        name="roofline_table", us=0,
+        derived=(f"records={len(recs)}_mem={n_mem}_compute={n_cmp}"
+                 f"_coll={n_col}_fits_hbm={fits}/{len(recs)}")))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    with tempfile.TemporaryDirectory() as tmp:
+        shards = bench_r1_dataset_reduction(tmp)
+        bench_r2_staging(tmp, shards)
+        bench_r3_loader_workers(tmp, shards)
+    bench_fig1_dp_scaling()
+    bench_r5_batch_vs_model()
+    bench_mlm_train_step()
+    bench_kernels()
+    bench_roofline_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart: the paper's pipeline end to end in ~a minute on CPU.
+
+Synthesizes a small binary-function corpus, applies the paper's three data
+recommendations (R1 tokenize+pack offline, R2 stage node-locally, R3 tuned
+prefetch loading), then pretrains a reduced BERT-MLM model and prints the
+loss curve.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core.mlm import mask_tokens
+from repro.data import (ByteBPETokenizer, NetworkFS, PrefetchLoader,
+                        StagedDataset, pack_corpus, read_raw_corpus,
+                        size_reduction, write_raw_corpus)
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import train
+
+SEQ, BATCH, STEPS = 64, 16, 60
+
+with tempfile.TemporaryDirectory() as tmp:
+    # R1 — tokenize + pack offline, keep only ids + masks
+    raw = os.path.join(tmp, "raw.jsonl")
+    nbytes = write_raw_corpus(raw, 800, seed=0)
+    fns = list(read_raw_corpus(raw))
+    tok = ByteBPETokenizer.train(fns[:40], vocab_size=1024, max_merges=120)
+    shards = pack_corpus(iter(fns), tok, os.path.join(tmp, "packed"),
+                         seq_len=SEQ)
+    print(f"R1: raw {nbytes/1e6:.1f}MB -> packed "
+          f"(-{size_reduction(nbytes, shards)*100:.0f}%)")
+
+    # R2 — stage to node-local storage
+    ds = StagedDataset(shards, network=NetworkFS(agg_bw=2e9, readers=8),
+                       local_dir=os.path.join(tmp, "local"))
+    print(f"R2: staged in {ds.stage():.2f}s")
+
+    # R3 — prefetch loader (masking happens in the workers)
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=128),
+                              vocab_size=1024, max_position=SEQ)
+
+    def mlm_work(batch, rng):
+        key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+        inp, lab, m = mask_tokens(key, jnp.asarray(batch["tokens"]),
+                                  cfg.vocab_size, mask_id=3)
+        return {"tokens": np.asarray(inp), "labels": np.asarray(lab),
+                "loss_mask": np.asarray(m) * batch["attn_mask"]}
+
+    loader = PrefetchLoader(ds, BATCH, n_workers=2, work_fn=mlm_work).start()
+
+    model = build_model(cfg)
+    run = RunConfig(model=cfg, shape=ShapeConfig("q", SEQ, BATCH, "train"),
+                    sharding="ddp", param_dtype="float32",
+                    activation_dtype="float32")
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=STEPS)
+    state, log = train(model, run, opt, loader, steps=STEPS, log_every=10)
+    loader.stop()
+    for s, m in zip(log.steps, log.metrics):
+        print(f"step {s:3d}  mlm_xent={m['xent']:.4f}  acc={m['acc']:.3f}")
+    assert log.metrics[-1]["xent"] < log.metrics[0]["xent"]
+    print("quickstart OK: loss decreased")

@@ -1,0 +1,30 @@
+"""llava-next-mistral-7b [vlm] — anyres tiling
+[hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Mistral-7B backbone: 32L d_model=4096 32H (GQA kv=8) head_dim=128
+d_ff=14336 vocab=32000, rope theta 1e6 (v0.2 base, no sliding window).
+
+The SigLIP/CLIP vision tower + projector is a STUB per the assignment
+carve-out: ``input_specs()`` provides precomputed patch embeddings for the
+anyres grid — base 576 tokens + 2x2 tiles = 5*576 = 2880 tokens, scattered
+into the sequence prefix.
+"""
+from repro.configs.base import ATTN, LayerSpec, ModelConfig, uniform_schedule
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    d_model=4096,
+    vocab_size=32_000,
+    schedule=uniform_schedule(32, LayerSpec(kind=ATTN)),
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    tie_embeddings=False,
+    n_image_tokens=2880,
+    max_position=32_768,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (anyres)",
+)

@@ -1,0 +1,34 @@
+"""whisper-small [audio] — encoder-decoder [arXiv:2212.04356].
+
+12L encoder + 12L decoder, d_model=768 12H (kv=12) head_dim=64 d_ff=3072
+vocab=51865, learned positions, LayerNorm, non-gated gelu MLP.
+
+The mel-spectrogram + conv frontend is a STUB per the assignment carve-out:
+``input_specs()`` provides precomputed (B, 1500, 768) frame embeddings.
+"""
+from repro.configs.base import ATTN, LayerSpec, ModelConfig, uniform_schedule
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    d_model=768,
+    vocab_size=51_865,
+    schedule=uniform_schedule(12, LayerSpec(kind=ATTN)),
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    mlp_act="gelu",
+    gated_mlp=False,
+    qkv_bias=True,
+    norm="layernorm",
+    norm_eps=1e-5,
+    tie_embeddings=True,
+    is_encoder_decoder=True,
+    n_encoder_layers=12,
+    n_audio_frames=1500,
+    pos_type="learned",
+    max_position=65_536,  # decoder positions; 448 in the release — widened so
+                          # the structural decode_32k shape can be exercised
+    source="arXiv:2212.04356 (Whisper)",
+)

@@ -1,0 +1,7 @@
+"""The paper's primary contribution as a library: analytic scaling models
+(R4/R5), the MLM pretraining objective, and gradient accumulation."""
+from repro.core.accum import accumulate_grads  # noqa: F401
+from repro.core.mlm import lm_loss, mask_tokens, mlm_loss  # noqa: F401
+from repro.core.scaling import (DPScalingModel, H100_NVL, MemoryModel,  # noqa: F401
+                                TPU_V5E, dp_scaling_curve, model_flops,
+                                param_count)

@@ -1,0 +1,53 @@
+"""Gradient accumulation: recovers the paper's global batch when R5's
+memory limit shrinks the per-device batch (microbatching over a lax.scan).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate_grads(loss_fn: Callable, params, batch, n_micro: int):
+    """loss_fn(params, microbatch) -> (loss, metrics).
+
+    Splits every leaf of ``batch`` along axis 0 into ``n_micro`` equal
+    microbatches and averages (loss, grads, metrics) over them with a scan,
+    so peak activation memory is that of ONE microbatch.
+    """
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, grads, metrics
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+
+    def body(carry, mb):
+        loss_acc, grad_acc, met_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, grads)
+        met_acc = jax.tree_util.tree_map(jnp.add, met_acc, metrics)
+        return (loss_acc + loss, grad_acc, met_acc), None
+
+    zeros_like_f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    # shape-probe one microbatch without computing: use eval_shape
+    mb0 = jax.tree_util.tree_map(lambda x: x[0], micro)
+    met_shape = jax.eval_shape(lambda p, b: loss_fn(p, b)[1], params, mb0)
+    init = (
+        jnp.zeros((), jnp.float32),
+        zeros_like_f32(params),
+        zeros_like_f32(met_shape),
+    )
+    (loss, grads, metrics), _ = jax.lax.scan(body, init, micro)
+    scale = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    metrics = jax.tree_util.tree_map(lambda m: m * scale, metrics)
+    return loss * scale, grads, metrics

@@ -1,0 +1,51 @@
+"""Masked-language-modeling objective (the paper's pretraining task).
+
+15% of tokens are selected; of those 80% become [MASK], 10% a random token,
+10% unchanged (BERT recipe).  Loss is cross-entropy on the selected
+positions only.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+MASK_RATE = 0.15
+
+
+def mask_tokens(key, tokens, vocab_size: int, mask_id: int,
+                mask_rate: float = MASK_RATE,
+                special_boundary: int = 4):
+    """Returns (inputs, labels, loss_mask).  Token ids < special_boundary
+    are never masked (pad/cls/sep/mask specials)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    maskable = tokens >= special_boundary
+    sel = (jax.random.uniform(k1, tokens.shape) < mask_rate) & maskable
+    r = jax.random.uniform(k2, tokens.shape)
+    rand_tok = jax.random.randint(k3, tokens.shape, special_boundary, vocab_size)
+    inputs = jnp.where(sel & (r < 0.8), mask_id, tokens)
+    inputs = jnp.where(sel & (r >= 0.8) & (r < 0.9), rand_tok, inputs)
+    labels = tokens
+    return inputs, labels, sel.astype(jnp.float32)
+
+
+def mlm_loss(logits, labels, loss_mask) -> Tuple[jnp.ndarray, dict]:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    loss = (nll * loss_mask).sum() / denom
+    acc = ((logits.argmax(-1) == labels) * loss_mask).sum() / denom
+    return loss, {"mlm_loss": loss, "mlm_acc": acc, "masked_tokens": loss_mask.sum()}
+
+
+def lm_loss(logits, labels, loss_mask=None):
+    """Next-token cross entropy for decoder-only LMs; labels are already
+    shifted by the data pipeline (labels[t] = tokens[t+1])."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if loss_mask is None:
+        loss_mask = jnp.ones_like(nll)
+    denom = jnp.maximum(loss_mask.sum(), 1.0)
+    loss = (nll * loss_mask).sum() / denom
+    return loss, {"lm_loss": loss, "tokens": denom}

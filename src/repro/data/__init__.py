@@ -1,0 +1,8 @@
+from repro.data.cache import NetworkFS, StagedDataset  # noqa: F401
+from repro.data.corpus import (read_raw_corpus, synth_function,  # noqa: F401
+                               write_raw_corpus)
+from repro.data.loader import (PrefetchLoader, measure_throughput,  # noqa: F401
+                               tune_workers)
+from repro.data.pack import PackedShard, pack_corpus, size_reduction  # noqa: F401
+from repro.data.tokenizer import (CLS, MASK, PAD, SEP,  # noqa: F401
+                                  ByteBPETokenizer)

@@ -1,0 +1,77 @@
+"""R2: node-local dataset staging.
+
+On the paper's cluster every node copies the packed 25 GB dataset from
+Lustre to local SSD before training.  ``StagedDataset`` models the same
+two-tier layout: a *network* tier with a simulated shared-bandwidth budget
+(contention grows with reader count) and a *local* tier at full speed.
+``stage()`` performs the one-time copy and flips reads to the local tier —
+the measured crossover is benchmark ``data_staging`` (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.data.pack import PackedShard
+
+
+@dataclass
+class NetworkFS:
+    """Simulated shared network storage: ``agg_bw`` bytes/s aggregate,
+    divided across concurrent readers (Lustre/25GbE contention model)."""
+
+    agg_bw: float = 2e9
+    readers: int = 1
+
+    def read_delay(self, nbytes: int) -> float:
+        return nbytes / (self.agg_bw / max(1, self.readers))
+
+
+@dataclass
+class StagedDataset:
+    shards: List[PackedShard]
+    network: Optional[NetworkFS] = None     # None => already local
+    local_dir: Optional[str] = None
+    staged: bool = field(default=False, init=False)
+    stage_seconds: float = field(default=0.0, init=False)
+
+    def stage(self) -> float:
+        """One-time copy network -> node-local (R2).  Returns seconds
+        (simulated network time + real copy time)."""
+        assert self.local_dir
+        os.makedirs(self.local_dir, exist_ok=True)
+        t0 = time.perf_counter()
+        sim = 0.0
+        new = []
+        for s in self.shards:
+            if self.network is not None:
+                sim += self.network.read_delay(s.nbytes)
+            tp = os.path.join(self.local_dir, os.path.basename(s.tokens_path))
+            mp = os.path.join(self.local_dir, os.path.basename(s.mask_path))
+            shutil.copyfile(s.tokens_path, tp)
+            shutil.copyfile(s.mask_path, mp)
+            new.append(PackedShard(tp, mp))
+        self.shards = new
+        self.network = None
+        self.staged = True
+        self.stage_seconds = (time.perf_counter() - t0) + sim
+        return self.stage_seconds
+
+    def read_shard(self, i: int):
+        """Reads shard i, applying the simulated network delay if unstaged."""
+        s = self.shards[i]
+        if self.network is not None:
+            time.sleep(min(0.05, self.network.read_delay(s.nbytes)))
+            # (sleep capped for test speed; benchmarks use read_delay directly)
+        toks, mask = s.load()
+        return np.asarray(toks), np.asarray(mask)
+
+    @property
+    def n_examples(self) -> int:
+        return sum(np.load(s.tokens_path, mmap_mode="r").shape[0]
+                   for s in self.shards)

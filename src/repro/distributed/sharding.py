@@ -1,0 +1,333 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Modes (DESIGN.md §5):
+  ddp      — paper-faithful pure data parallelism: params replicated,
+             batch sharded over every available mesh axis.
+  fsdp     — params (and optimizer state) sharded over "data" (ZeRO-3
+             analogue); batch over ("pod","data") [+ "model" if free].
+  tp       — Megatron-style tensor parallelism over "model" (serving).
+  fsdp_tp  — both (default for >=7B training).
+
+Rules are *candidate lists*: the first mesh axis that (a) exists, (b) is not
+already used by another dim of the same tensor and (c) divides the dim size
+is chosen; otherwise the dim is replicated.  This gives graceful fallback
+for e.g. kv_heads=8 on a model axis of 16 (falls back to head_dim).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Candidate = Union[str, Tuple[str, ...]]
+
+# rule tables: logical axis -> candidates (tried in order)
+_TP = {
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),       # fallback when kv_heads isn't divisible
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_hd": ("model",),
+}
+_FSDP = {"embed": ("data",)}
+
+RULES: Dict[str, Dict[str, Tuple[Candidate, ...]]] = {
+    "ddp": {},
+    "fsdp": dict(_FSDP),
+    "tp": dict(_TP),
+    "fsdp_tp": {**_FSDP, **_TP},
+}
+
+
+def _axis_size(mesh: Mesh, cand: Candidate) -> int:
+    if isinstance(cand, str):
+        return mesh.shape[cand]
+    return int(np.prod([mesh.shape[a] for a in cand]))
+
+
+def _cand_axes(cand: Candidate) -> Tuple[str, ...]:
+    return (cand,) if isinstance(cand, str) else tuple(cand)
+
+
+def spec_for(axes: Optional[Sequence[Optional[str]]], shape: Sequence[int],
+             rules: Dict[str, Tuple[Candidate, ...]], mesh: Mesh) -> P:
+    if axes is None:
+        return P()
+    used: set = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        assigned = None
+        for cand in rules.get(name, ()):  # type: ignore[arg-type]
+            cand_axes = _cand_axes(cand)
+            if not all(a in mesh.axis_names for a in cand_axes):
+                continue
+            if any(a in used for a in cand_axes):
+                continue
+            if dim % _axis_size(mesh, cand) != 0:
+                continue
+            assigned = cand if isinstance(cand, str) else tuple(cand)
+            used.update(cand_axes)
+            break
+        out.append(assigned)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, mode: str,
+                   drop_axes: Tuple[str, ...] = ()):
+    """NamedSharding tree for a (logical-axes, shapes) pair of pytrees."""
+    rules = {k: v for k, v in RULES[mode].items() if k not in drop_axes}
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(axes, leaf.shape, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) or x is None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation sharding
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh, global_batch: int, mode: str) -> Tuple[str, ...]:
+    """Largest prefix of the DP axis list that divides the global batch."""
+    if mode == "ddp":
+        prefer = [a for a in ("pod", "data", "model") if a in mesh.axis_names]
+    else:
+        prefer = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen: list = []
+    size = 1
+    for a in prefer:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    return tuple(chosen)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, mode: str, ndim: int = 2) -> P:
+    ax = batch_axes(mesh, global_batch, mode)
+    lead = ax if len(ax) != 1 else ax[0]
+    return P(lead if ax else None, *([None] * (ndim - 1)))
+
+
+def activation_sharding(mesh: Mesh, global_batch: int, mode: str,
+                        seq_axis: Optional[str] = None):
+    """Constraint applied to hidden states (B, S, d) between blocks.
+    ``seq_axis='model'`` enables Megatron-style sequence parallelism."""
+    ax = batch_axes(mesh, global_batch, mode)
+    lead = ax if len(ax) != 1 else ax[0]
+    spec = P(lead if ax else None, seq_axis, None)
+
+    def constrain(h):
+        return jax.lax.with_sharding_constraint(h, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def flash_attn_ctx(cfg, mesh: Mesh, mode: str, global_batch: int,
+                   seq_len: int):
+    """shard_map wrapper around the Pallas flash-attention kernel.
+
+    Batch is sharded over the DP axes; q heads are sharded over 'model'
+    when divisible (each shard slices the kv heads its q-head block maps
+    to — GQA block structure guarantees the slice is one contiguous kv
+    group when Hl | rep or rep | Hl).  Returns fn(q,k,v,causal,window) or
+    None when the kernel can't be mapped onto this mesh.
+    """
+    import jax.numpy as jnp
+
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    if not H or cfg.mla is not None:
+        return None
+    ms = mesh.shape.get("model", 1)
+    bax = batch_axes(mesh, global_batch, mode)
+    if mode in ("tp", "fsdp_tp") and H % ms == 0 and ms > 1:
+        Hl = H // ms
+        rep = H // Hkv
+        if not (rep % Hl == 0 or Hl % rep == 0):
+            return None
+        head_axis = "model"
+        kv_len = max(1, Hl // rep)
+    elif mode == "ddp":
+        head_axis = None
+        kv_len = Hkv
+        Hl, rep = H, H // Hkv
+    else:
+        return None
+    if seq_len % 512 and seq_len % 128:
+        return None
+    lead = (bax if len(bax) != 1 else bax[0]) if bax else None
+    qspec = P(lead, None, head_axis, None)
+    kvspec = P(lead, None, None, None)
+
+    def fn(q, k, v, *, causal, window, softcap, scale):
+        from repro.kernels import ops as kops
+
+        def body(ql, kl, vl):
+            if head_axis is not None:
+                idx = jax.lax.axis_index(head_axis)
+                kv_start = (idx * Hl) // rep
+                kl_ = jax.lax.dynamic_slice_in_dim(kl, kv_start, kv_len, 2)
+                vl_ = jax.lax.dynamic_slice_in_dim(vl, kv_start, kv_len, 2)
+            else:
+                kl_, vl_ = kl, vl
+            with jax.named_scope("pallas_flash"):
+                return kops.flash_attention(ql, kl_, vl_, causal, window,
+                                            softcap, scale)
+
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+            out_specs=qspec, check_vma=False)(q, k, v)
+
+    return fn
+
+
+def flash_shard_shapes(cfg, mesh: Mesh, mode: str, global_batch: int):
+    """Per-shard (B_loc, Hl, kv_len) the flash ctx will see, or None."""
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    if not H or cfg.mla is not None:
+        return None
+    ms = mesh.shape.get("model", 1)
+    bax = batch_axes(mesh, global_batch, mode)
+    bsz = 1
+    for a in bax:
+        bsz *= mesh.shape[a]
+    B_loc = global_batch // bsz
+    if mode in ("tp", "fsdp_tp") and H % ms == 0 and ms > 1:
+        Hl = H // ms
+        rep = H // Hkv
+        if not (rep % Hl == 0 or Hl % rep == 0):
+            return None
+        return B_loc, Hl, max(1, Hl // rep)
+    if mode == "ddp":
+        return B_loc, H, Hkv
+    return None
+
+
+def flash_analytic_cost(cfg, mesh: Mesh, mode: str, global_batch: int,
+                        seq_len: int, *, causal: bool = True, bq: int = 512,
+                        dtype_bytes: int = 2):
+    """Per-call (per-device) analytic flash-kernel cost: q/o move once,
+    k/v stream once per q block; scores never leave VMEM.  Used as the
+    pallas_cost substitution in the roofline (hlocost.HloCostModel)."""
+    from repro.analysis.hlocost import Cost
+
+    shapes = flash_shard_shapes(cfg, mesh, mode, global_batch)
+    if shapes is None:
+        return None
+    B_loc, Hl, kvl = shapes
+    S = seq_len
+    D = cfg.head_dim
+    factor = 0.5 if causal else 1.0
+    flops = 4.0 * B_loc * Hl * S * S * D * factor
+    passes = max(1, S // min(bq, S))
+    byts = dtype_bytes * B_loc * (
+        2 * S * Hl * D + 2 * S * kvl * D * passes * factor)
+    return Cost(flops=flops, bytes=float(byts))
+
+
+def ssd_analytic_cost(cfg, mesh: Mesh, mode: str, global_batch: int,
+                      seq_len: int, dtype_bytes: int = 2):
+    """Per-call (per-device) analytic SSD chunk-scan kernel cost: x/dt/B/C
+    read once, y written once, the (L,L) decay tile and (N,P) state stay
+    in VMEM.  flops per chunk: C·Bᵀ (L²N) + seg·x (L²P) + two (L,N,P)
+    state contractions."""
+    from repro.analysis.hlocost import Cost
+    from repro.models.ssm import ssm_dims
+
+    if cfg.ssm is None:
+        return None
+    d_inner, H, Pd, G, N = ssm_dims(cfg)
+    ms = mesh.shape.get("model", 1)
+    bax = batch_axes(mesh, global_batch, mode)
+    bsz = 1
+    for a in bax:
+        bsz *= mesh.shape[a]
+    B_loc = max(1, global_batch // bsz)
+    H_loc = H // ms if (mode in ("tp", "fsdp_tp") and H % ms == 0) else H
+    S = seq_len
+    L = cfg.ssm.chunk
+    flops = 2.0 * B_loc * H_loc * S * (L * (N + Pd) + 2.0 * N * Pd)
+    byts = dtype_bytes * B_loc * S * (
+        2 * H_loc * Pd          # x read + y write
+        + H_loc                 # dt
+        + 4 * G * N)            # B, C read (+ conv outputs)
+    return Cost(flops=flops, bytes=float(byts))
+
+
+def attn_shard_ctx(cfg, mesh: Mesh, mode: str, global_batch: int,
+                   seq_len: int):
+    """Context-parallel attention constraints.
+
+    When kv-head sharding over the model axis is impossible
+    (kv_heads % model != 0), the propagation fallback shards head_dim,
+    which replicates the whole (S,S) score computation on every model-axis
+    chip and psums it.  Instead: shard q (and the scores) over the
+    *sequence*, keep k/v replicated on the model axis.  Returns None when
+    head-parallel attention is fine.
+    """
+    if mode not in ("tp", "fsdp_tp") or "model" not in mesh.axis_names:
+        return None
+    ms = mesh.shape["model"]
+    if cfg.mla is not None:
+        return None  # MLA: heads shard cleanly (16 % 16 == 0)
+    if cfg.n_kv_heads and cfg.n_kv_heads % ms == 0:
+        return None  # head-parallel attention already shards the scores
+    if seq_len % ms != 0:
+        return None
+    bax = batch_axes(mesh, global_batch, mode)
+    lead = bax if len(bax) != 1 else bax[0]
+    qspec = P(lead if bax else None, "model", None, None)
+    kvspec = P(lead if bax else None, None, None, None)
+
+    def cq(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, qspec))
+
+    def ckv(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, kvspec))
+
+    return {"q": cq, "kv": ckv}
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_rules(mesh: Mesh, global_batch: int, mode: str):
+    """Sequence-sharded decode caches: cache_seq over 'model', and over
+    ('data','model') when the batch can't use the data axis (long-context
+    batch=1)."""
+    rules = dict(RULES[mode])
+    bax = batch_axes(mesh, global_batch, "fsdp")  # ('pod','data') prefix
+    rules["batch"] = (tuple(bax),) if bax else ()
+    if bax and "data" in bax:
+        rules["cache_seq"] = ("model",)
+    else:
+        seq_ax = tuple(a for a in ("pod", "data", "model")
+                       if a in mesh.axis_names)
+        rules["cache_seq"] = (seq_ax, "model")
+    # decode-time TP for cache heads is impossible together with seq
+    # sharding on the same axis; spec_for's used-set handles the conflict.
+    return rules
+
+
+def cache_seq_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    bax = batch_axes(mesh, global_batch, "fsdp")
+    if bax and "data" in bax:
+        return ("model",)
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    return batch_axes(mesh, global_batch, "fsdp")

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU; see ops.py)."""

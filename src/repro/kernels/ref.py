@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: float = 0.0,
+                        scale: Optional[float] = None):
+    """q:(B,S,H,D) k,v:(B,S,Hkv,D) -> (B,S,H,D).  GQA by head repeat."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    scale = D**-0.5 if scale is None else scale
+    qr = q.reshape(B, S, Hkv, rep, D)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qr, k).astype(jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    s = jnp.where(ok[None, None, None], s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", w.astype(v.dtype), v)
+    return o.reshape(B, S, H, D)
+
+
+def ssd_ref(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Delegates to the model-zoo chunked oracle (single source of truth)."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, B, C, chunk, initial_state)
+
+
+def xent_ref(logits, labels):
+    """logits:(T,V) f32/bf16, labels:(T,) -> nll:(T,) f32."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(lp, labels[:, None], axis=-1)[:, 0]

@@ -1,0 +1,207 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb harness: named (case × variant) lowerings with the
+hypothesis recorded next to the measurement.
+
+  python -m repro.launch.hillclimb --case qwen_prefill [--variant v2_flash]
+
+Each record lands in experiments/perf/<case>__<variant>.json.
+"""
+import argparse
+import json
+import time
+
+from repro.analysis.roofline import analyze
+from repro.configs.base import INPUT_SHAPES, ShapeConfig
+from repro.launch import lowering as L
+from repro.launch.mesh import make_production_mesh
+
+PAPER_120M = ShapeConfig("paper_mlm_512", 512, 184 * 256, "train")
+
+# case -> (arch, shape, kind, [(variant, hypothesis, overrides)])
+CASES = {
+    # worst roofline fraction + HBM misfit (memory 44s vs compute 4.8s)
+    "qwen_prefill": ("qwen2-72b", INPUT_SHAPES["prefill_32k"], "prefill", [
+        ("v0_baseline", "baseline: tp weights, XLA chunked attention, "
+         "unsharded prefill outputs", {}),
+        ("v1_shard_cache_out",
+         "out=21.5GB/dev is the returned KV cache left unsharded by XLA; "
+         "sharding outputs like the decode step consumes them should cut "
+         "out-bytes ~16x and the associated write traffic",
+         {"shard_cache_out": True}),
+        ("v2_flash_kernel",
+         "t_memory is dominated by (512,32768) f32 score tiles round-"
+         "tripping HBM per q-chunk; the shard_map'd Pallas flash kernel "
+         "keeps tiles in VMEM -> expect t_memory to approach weights+kv "
+         "traffic (~2s)",
+         {"shard_cache_out": True, "use_pallas": True}),
+        ("v3_fsdp_weights",
+         "args=9GB/dev is the tp-replicated weight copy per data row; "
+         "2D-sharding weights (fsdp_tp) cuts args 16x at the cost of "
+         "per-layer all-gathers (collective term up, memory fit secured)",
+         {"shard_cache_out": True, "use_pallas": True,
+          "sharding": "fsdp_tp"}),
+        ("v4_replicate_kv_proj",
+         "v2/v3's tcoll=7.0s is the per-layer all-gather of k/v (head_dim-"
+         "sharded by TP) that the head-sharded kernel needs replicated; "
+         "replicating the (tiny) kv projections instead trades 16x "
+         "redundant kv-proj flops (~0.3% of total) for zero gathers",
+         {"shard_cache_out": True, "use_pallas": True,
+          "sharding": "fsdp_tp", "replicate_kv": True}),
+        ("v5_prefill_seq_parallel",
+         "v4 showed tcoll is NOT the kv gather but the Megatron all-reduce "
+         "of h after row-parallel wo (4.3GB f32 x 80 layers); sequence-"
+         "parallel constraints between blocks turn it into reduce-scatter "
+         "+ all-gather (~2x less traffic, bf16 on TPU)",
+         {"shard_cache_out": True, "use_pallas": True,
+          "sharding": "fsdp_tp", "replicate_kv": True,
+          "seq_parallel_serve": True}),
+    ]),
+    # most collective-bound (t_coll 6.9s on train_4k)
+    "gemma2_train": ("gemma2-27b", INPUT_SHAPES["train_4k"], "train", [
+        ("v0_baseline", "baseline: fsdp_tp + SP, head-parallel XLA "
+         "attention (kv=16 divides the model axis)", {}),
+        ("v1_flash_kernel",
+         "score traffic (46 layers x softcapped (S,S) f32 tiles) drives "
+         "both t_memory and, via SP gathers around attention, t_coll; "
+         "flash kernel keeps scores in VMEM",
+         {"use_pallas": True}),
+        ("v2_microbatch4",
+         "remaining activation traffic scales with the live microbatch; "
+         "accumulating 4 microbatches cuts peak activations ~4x with "
+         "~zero extra collectives (R5 in reverse)",
+         {"use_pallas": True, "microbatch": 4}),
+        ("v3_replicate_kv_proj",
+         "kv all-gather for the head-sharded kernel remains in tcoll; "
+         "replicate the kv projections over the model axis",
+         {"use_pallas": True, "microbatch": 4, "replicate_kv": True}),
+    ]),
+    # the paper's own configuration (Fig. 1 point: 120M, batch 184/device)
+    "paper_mlm": ("bert-mlm-120m", PAPER_120M, "train", [
+        ("v0_baseline", "baseline: pure DDP exactly as the paper ran it "
+         "(batch 184/device); XLA attention materializes "
+         "(184,12,512,512) f32 scores -> misfits 16GB HBM", {}),
+        ("v1_flash_kernel",
+         "the paper saturated H100s at batch 184 only because 94GB HBM "
+         "absorbs the score tensors; on 16GB v5e the flash kernel is what "
+         "makes the paper's configuration fit at all",
+         {"use_pallas": True}),
+        ("v2_microbatch2",
+         "if v1 still misfits, split the paper's batch into 2 microbatches "
+         "(keeps the global batch; R5's remedy)",
+         {"use_pallas": True, "microbatch": 2}),
+        ("v3_attn_chunk128",
+         "the interpret-mode arena hides v1's true fit; an XLA-only "
+         "equivalent check: shrink the q-chunk to 128 so live scores are "
+         "(184,12,128,512)f32=0.58GB — if this fits, the VMEM-resident "
+         "kernel (whose working set is 1000x smaller) certainly does",
+         {"attn_chunk": 128, "microbatch": 2}),
+    ]),
+    # bonus: MoE dispatch efficiency (useful-flops ratio 0.06 at baseline)
+    "deepseek_train": ("deepseek-v2-lite-16b", INPUT_SHAPES["train_4k"],
+                       "train", [
+        ("v0_baseline", "baseline: capacity-based EP dispatch, cf=1.25; "
+         "useful=0.06 because 6*N_active*D ignores MLA's latent "
+         "expansions AND quadratic attention, which dominate a 2.7B-"
+         "active model at 4k (denominator artifact, not waste)", {}),
+        ("v1_capacity_1_0",
+         "dispatch buffers (E,C,d) scale with the capacity factor; "
+         "cf=1.0 cuts a2a + expert padding traffic 20% at some drop risk "
+         "(load-balance loss keeps routing near-uniform)",
+         {"capacity_factor": 1.0}),
+        ("v2_microbatch2",
+         "temp 20.2GB>16: halve live activations/dispatch buffers",
+         {"capacity_factor": 1.0, "microbatch": 2}),
+    ]),
+    # bonus: hybrid SSD materialization (temp 26.9GB misfit at baseline)
+    "zamba2_train": ("zamba2-2.7b", INPUT_SHAPES["train_4k"], "train", [
+        ("v0_baseline", "baseline: jnp chunked SSD materializes "
+         "(B,nc,L,L,H) decay matrices in f32", {}),
+        ("v1_microbatch4",
+         "SSD intra-chunk temps scale with live batch; microbatch=4 "
+         "should fit HBM without touching the math",
+         {"microbatch": 4}),
+    ]),
+}
+
+
+def run_case(case: str, only_variant=None, out_dir="experiments/perf",
+             multi_pod=False):
+    arch, shape, kind, variants = CASES[case]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    os.makedirs(out_dir, exist_ok=True)
+    for name, hypothesis, ov in variants:
+        if only_variant and name != only_variant:
+            continue
+        tag = f"{case}__{name}"
+        path = os.path.join(out_dir, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip-cached] {tag}")
+            continue
+        t0 = time.time()
+        ov = dict(ov)
+        attn_chunk = ov.pop("attn_chunk", None)
+        cf = ov.pop("capacity_factor", None)
+        import repro.models.attention as _attn
+        old_chunk = _attn.ATTN_CHUNK
+        if attn_chunk:
+            _attn.ATTN_CHUNK = attn_chunk
+        try:
+            if cf is not None:
+                import dataclasses
+                from repro.configs import get_config
+                cfg0 = get_config(arch)
+                # capacity factor override via a temporary config monkeypatch
+                import repro.configs as _cfgs
+                _orig = _cfgs.get_config
+                def patched(a, _orig=_orig, cfg0=cfg0, cf=cf):
+                    c_ = _orig(a)
+                    if a == arch and c_.moe is not None:
+                        return dataclasses.replace(
+                            c_, moe=dataclasses.replace(
+                                c_.moe, capacity_factor=cf))
+                    return c_
+                _cfgs.get_config = patched
+                L.get_config = patched
+            if kind == "train":
+                c = L.lower_train(arch, shape, mesh, **ov)
+            else:
+                c = L.lower_prefill(arch, shape, mesh, **ov)
+            comp = c.lowered.compile()
+            r = analyze(comp, arch=arch, shape=shape.name,
+                        mesh_name="pod16x16", chips=mesh.size,
+                        sharding=c.sharding,
+                        model_flops_global=c.model_flops_global,
+                        pallas_cost=c.pallas_cost)
+            rec = r.to_dict()
+            rec.update(case=case, variant=name, hypothesis=hypothesis,
+                       overrides={k: str(v) for k, v in ov.items()},
+                       wall_s=round(time.time() - t0, 1))
+            print(f"[{tag}] tc={r.t_compute*1e3:.0f}ms tm={r.t_memory*1e3:.0f}ms "
+                  f"tcoll={r.t_collective*1e3:.0f}ms useful="
+                  f"{r.useful_flops_ratio:.2f} "
+                  f"mem={(r.arg_bytes+r.temp_bytes_tpu_est+r.out_bytes)/1e9:.1f}GB "
+                  f"fits={r.fits_hbm} ({time.time()-t0:.0f}s)")
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            rec = {"case": case, "variant": name, "hypothesis": hypothesis,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-1500:]}
+            print(f"[FAIL] {tag}: {str(e)[:300]}")
+        finally:
+            _attn.ATTN_CHUNK = old_chunk
+            if cf is not None:
+                _cfgs.get_config = _orig
+                L.get_config = _orig
+        json.dump(rec, open(path, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", choices=list(CASES), default=None)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    for c in ([args.case] if args.case else list(CASES)):
+        run_case(c, args.variant, args.out)

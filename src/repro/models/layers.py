@@ -1,0 +1,152 @@
+"""Shared primitive layers: norms, RoPE, MLPs, embeddings, softcap."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ModelConfig, dim: int | None = None):
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros"),
+        }
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rms_normalize(x, eps=1e-6):
+    """Weightless RMS norm (QK-norm in gemma3, mamba gated norm core)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Logit softcap (gemma2)
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None, ff_axis: str = "ff"):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out = {"wo": ParamSpec((f, d), (ff_axis, "embed"))}
+    if cfg.gated_mlp:
+        out["wi"] = ParamSpec((d, f), ("embed", ff_axis))
+        out["wg"] = ParamSpec((d, f), ("embed", ff_axis))
+    else:
+        out["wi"] = ParamSpec((d, f), ("embed", ff_axis))
+        out["bi"] = ParamSpec((f,), (ff_axis,), init="zeros")
+        out["bo"] = ParamSpec((d,), ("embed",), init="zeros")
+    return out
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.gated_mlp:
+        h = _act(x @ p["wg"], cfg.mlp_act) * (x @ p["wi"])
+        return h @ p["wo"]
+    h = _act(x @ p["wi"] + p["bi"], cfg.mlp_act)
+    return h @ p["wo"] + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig):
+    out = {"tokens": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if cfg.pos_type == "learned":
+        out["positions"] = ParamSpec(
+            (cfg.max_position, cfg.d_model), (None, "embed"), scale=0.02
+        )
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig, dtype):
+    h = jnp.take(p["tokens"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, dtype)
+    return h
+
+
+def add_positions(p, h, positions, cfg: ModelConfig):
+    if cfg.pos_type == "learned":
+        h = h + jnp.take(p["positions"], positions, axis=0).astype(h.dtype)
+    return h
+
+
+def unembed(p, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = h @ p["tokens"].astype(h.dtype).T
+    else:
+        logits = h @ p["lm_head"].astype(h.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits

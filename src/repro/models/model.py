@@ -1,0 +1,77 @@
+"""Public model API: ``build_model(cfg)`` returns a :class:`Model` bundle."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.params import abstract_params, init_params, logical_axes
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- params ----
+    def specs(self):
+        return transformer.model_specs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.specs(), key, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16):
+        return abstract_params(self.specs(), dtype)
+
+    def param_axes(self):
+        return logical_axes(self.specs())
+
+    # ---- compute ----
+    def apply(self, params, batch: Dict[str, Any], *, mode: str = "train",
+              cache=None, **kw):
+        return transformer.forward(params, self.cfg, batch, mode=mode,
+                                   cache=cache, **kw)
+
+    def prefill(self, params, batch, **kw):
+        logits, cache, aux = self.apply(params, batch, mode="prefill", **kw)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, cache, token, pos, **kw):
+        batch = {"tokens": token, "pos": pos}
+        logits, cache, _ = self.apply(batch=batch, params=params,
+                                      mode="decode", cache=cache, **kw)
+        return logits, cache
+
+    # ---- caches ----
+    def cache_shapes(self, batch_size: int, seq_len: int, dtype=jnp.bfloat16):
+        return transformer.cache_shapes(self.cfg, batch_size, seq_len, dtype)
+
+    # ---- inputs ----
+    def input_specs(self, shape, *, act_dtype=jnp.bfloat16):
+        """ShapeDtypeStruct stand-ins for every model input of a ShapeConfig."""
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        if shape.mode in ("train", "prefill"):
+            out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if shape.mode == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+                out["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+            if cfg.n_image_tokens:
+                out["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_image_tokens, cfg.d_model), act_dtype)
+            if cfg.is_encoder_decoder:
+                out["audio_frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_audio_frames, cfg.d_model), act_dtype)
+            return out
+        # decode: one new token against a cache of S
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,93 @@
+"""Parameter-spec trees.
+
+Each module declares its parameters once as a tree of :class:`ParamSpec`
+(shape + logical axis names + initializer).  Three consumers derive from the
+same tree, so shapes / shardings / initializers can never diverge:
+
+* ``init_params``     -> randomly initialized pytree (real arrays)
+* ``abstract_params`` -> ShapeDtypeStruct pytree (dry-run, no allocation)
+* ``logical_axes``    -> pytree of logical-axis tuples (sharding rules)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 0.0                # 0 => 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_spec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[-1]
+    if len(shape) == 2:
+        return shape[0]
+    # stacked / 3D+: treat all but last axis as fan-in except a leading
+    # "layers" stack axis which initializers must ignore; callers bake the
+    # stack into shape[0], so use the product of middle dims.
+    return max(1, int(np.prod(shape[:-1])) // shape[0]) if len(shape) > 2 else shape[0]
+
+
+def _init_leaf(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A_log init: log of uniform [1, 16] (mamba2 convention)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":
+        # dt bias: inverse softplus of uniform [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dtype)
+    scale = spec.scale if spec.scale else 1.0 / np.sqrt(_fan_in(spec.shape))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(spec_tree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, dtype=jnp.bfloat16):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree
+    )
+
+
+def logical_axes(spec_tree):
+    return tree_map_specs(lambda s: s.axes, spec_tree)
+
+
+def stack_specs(spec_tree, repeats: int):
+    """Prepend a ``layers`` stack axis of size ``repeats`` to every leaf."""
+    return tree_map_specs(
+        lambda s: dataclasses.replace(
+            s, shape=(repeats, *s.shape), axes=("layers", *s.axes)
+        ),
+        spec_tree,
+    )

@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) blocks.  [arXiv:2405.21060]
+
+Training/prefill uses the chunked dual form (quadratic within a chunk,
+linear recurrence across chunks); decode is the O(1) recurrent step.
+The chunk scan is the compute hot-spot and has a Pallas TPU kernel
+(``repro.kernels.ssd_scan``); ``ssd_chunked`` here is the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_normalize
+from repro.models.params import ParamSpec
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.n_groups, s.d_state
+
+
+def ssm_specs(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, Pd, G, N = ssm_dims(cfg)
+    K = s.d_conv
+    return {
+        "w_x": ParamSpec((d, H, Pd), ("embed", "ssm_heads", "ssm_hd")),
+        "w_z": ParamSpec((d, H, Pd), ("embed", "ssm_heads", "ssm_hd")),
+        "w_B": ParamSpec((d, G, N), ("embed", None, None)),
+        "w_C": ParamSpec((d, G, N), ("embed", None, None)),
+        "w_dt": ParamSpec((d, H), ("embed", "ssm_heads")),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="ssm_dt"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="ssm_a"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "conv_x": ParamSpec((K, H, Pd), (None, "ssm_heads", "ssm_hd"), scale=0.2),
+        "conv_B": ParamSpec((K, G, N), (None, None, None), scale=0.2),
+        "conv_C": ParamSpec((K, G, N), (None, None, None), scale=0.2),
+        "gate_norm": ParamSpec((H, Pd), ("ssm_heads", "ssm_hd"), init="ones"),
+        "w_o": ParamSpec((H, Pd, d), ("ssm_heads", "ssm_hd", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width K, implemented as K shifted adds)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(u, w):
+    """u: (B,S,...chan), w: (K,...chan) — causal depthwise conv."""
+    K = w.shape[0]
+    S = u.shape[1]
+    pad = [(0, 0), (K - 1, 0)] + [(0, 0)] * (u.ndim - 2)
+    up = jnp.pad(u, pad)
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        out = out + up[:, i : i + S] * w[i]
+    return out
+
+
+def _conv_step(state, u_new, w):
+    """state: (B,K-1,...chan) past inputs; u_new: (B,...chan)."""
+    K = w.shape[0]
+    full = jnp.concatenate([state, u_new[:, None]], axis=1)  # (B,K,...)
+    y = jnp.einsum("bk...,k...->b...", full, w.astype(u_new.dtype))
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan — pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """x:(B,S,H,P) dt:(B,S,H) A:(H,)<0  B,C:(B,S,G,N).
+
+    Returns (y:(B,S,H,P), final_state:(B,H,N,P)).
+    """
+    Bb, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    L = chunk
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // L
+
+    f32 = jnp.float32
+    xs = x.reshape(Bb, nc, L, H, Pd)
+    dts = dt.reshape(Bb, nc, L, H).astype(f32)
+    Bh = jnp.repeat(B.reshape(Bb, nc, L, G, N), rep, axis=3).astype(x.dtype)
+    Ch = jnp.repeat(C.reshape(Bb, nc, L, G, N), rep, axis=3).astype(x.dtype)
+
+    a = dts * A.astype(f32)                      # (B,nc,L,H), negative
+    acs = jnp.cumsum(a, axis=2)                  # inclusive cumsum
+    # chunk states: contribution of each chunk to the running state
+    decay_out = jnp.exp(acs[:, :, -1:, :] - acs)             # (B,nc,L,H)
+    cstate = jnp.einsum(
+        "bclh,bclh,bclhn,bclhp->bchnp",
+        decay_out, dts, Bh.astype(f32), xs.astype(f32),
+    )                                                         # (B,nc,H,N,P)
+    cdecay = jnp.exp(acs[:, :, -1, :])                        # (B,nc,H)
+
+    init = (
+        jnp.zeros((Bb, H, N, Pd), f32)
+        if initial_state is None else initial_state.astype(f32)
+    )
+
+    def step(state, inp):
+        cs, cd = inp
+        out = state
+        new = cd[..., None, None] * state + cs
+        return new, out
+
+    final, states_in = jax.lax.scan(
+        step,
+        init,
+        (cstate.transpose(1, 0, 2, 3, 4), cdecay.transpose(1, 0, 2)),
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,P)
+
+    # inter-chunk contribution
+    y_prev = jnp.einsum(
+        "bclhn,bchnp,bclh->bclhp",
+        Ch.astype(f32), states_in, jnp.exp(acs),
+    )
+    # intra-chunk (dual / attention-like) contribution
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch.astype(f32), Bh.astype(f32))
+    # L_mat[l,s] = exp(acs[l] - acs[s]) for s <= l
+    diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]      # (B,nc,L,S,H)
+    lmask = jnp.tril(jnp.ones((L, L), bool))
+    lmat = jnp.where(lmask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    seg = scores * lmat.transpose(0, 1, 4, 2, 3) \
+        * dts.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", seg, xs.astype(f32))
+
+    y = (y_prev + y_intra).reshape(Bb, nc * L, H, Pd)[:, : S]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x, dt, A, B, C):
+    """Single recurrent step.  state:(B,H,N,P) x:(B,H,P) dt:(B,H) B,C:(B,G,N)."""
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)       # (B,H,N)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    dA = jnp.exp(dt * A.astype(jnp.float32))                  # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh, x.astype(jnp.float32))
+    new = dA[..., None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new)
+    return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _project(p, h, cfg: ModelConfig):
+    x = jnp.einsum("bsd,dhp->bshp", h, p["w_x"].astype(h.dtype))
+    z = jnp.einsum("bsd,dhp->bshp", h, p["w_z"].astype(h.dtype))
+    B = jnp.einsum("bsd,dgn->bsgn", h, p["w_B"].astype(h.dtype))
+    C = jnp.einsum("bsd,dgn->bsgn", h, p["w_C"].astype(h.dtype))
+    dt = h @ p["w_dt"].astype(h.dtype) + p["dt_bias"].astype(h.dtype)
+    return x, z, B, C, dt
+
+
+def apply_mamba(p, h, cfg: ModelConfig, *, mode: str, cache=None,
+                use_pallas: bool = False):
+    """Returns (out, new_cache).  cache = {conv_x, conv_B, conv_C, state}."""
+    s = cfg.ssm
+    d_inner, H, Pd, G, N = ssm_dims(cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode in ("train", "prefill"):
+        x, z, B, C, dt = _project(p, h, cfg)
+        x = jax.nn.silu(_causal_conv(x, p["conv_x"].astype(h.dtype)))
+        B = jax.nn.silu(_causal_conv(B, p["conv_B"].astype(h.dtype)))
+        C = jax.nn.silu(_causal_conv(C, p["conv_C"].astype(h.dtype)))
+        dt = jax.nn.softplus(dt.astype(jnp.float32))
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            with jax.named_scope("pallas_ssd"):
+                y, state = kops.ssd(x, dt, A, B, C, chunk=s.chunk)
+        else:
+            y, state = ssd_chunked(x, dt, A, B, C, chunk=s.chunk)
+        y = y + p["D"].astype(y.dtype)[None, None, :, None] * x
+        y = rms_normalize(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+        y = y * p["gate_norm"].astype(y.dtype)
+        out = jnp.einsum("bshp,hpd->bsd", y, p["w_o"].astype(h.dtype))
+        new_cache = None
+        if mode == "prefill":
+            # conv tails need the *pre-conv* projections of the last K-1 steps
+            xr, zr, Br, Cr, dtr = _project(p, h[:, -(s.d_conv - 1):], cfg)
+            new_cache = {
+                "conv_x": xr.astype(h.dtype),
+                "conv_B": Br.astype(h.dtype),
+                "conv_C": Cr.astype(h.dtype),
+                "state": state.astype(jnp.float32),
+            }
+        return out, new_cache
+
+    # ------------------------------------------------------------- decode
+    assert cache is not None
+    x, z, B, C, dt = _project(p, h, cfg)   # h: (B,1,d)
+    x1, B1, C1, dt1 = x[:, 0], B[:, 0], C[:, 0], dt[:, 0]
+    xc, cx = _conv_step(cache["conv_x"], x1, p["conv_x"])
+    Bc, cB = _conv_step(cache["conv_B"], B1, p["conv_B"])
+    Cc, cC = _conv_step(cache["conv_C"], C1, p["conv_C"])
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+    dt1 = jax.nn.softplus(dt1.astype(jnp.float32))
+    y, state = ssd_step(cache["state"], xc, dt1, A, Bc, Cc)
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xc
+    y = rms_normalize(y * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(y.dtype))
+    y = y * p["gate_norm"].astype(y.dtype)
+    out = jnp.einsum("bhp,hpd->bd", y, p["w_o"].astype(h.dtype))[:, None]
+    return out, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": state}

@@ -1,0 +1,239 @@
+"""Top-level model assemblies: decoder-only LM, encoder-only (BERT/MLM),
+encoder-decoder (whisper), VLM (llava: stub patch-embedding prefix)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLA, SHARED_ATTN, LayerSpec, \
+    ModelConfig, ScheduleGroup
+from repro.models.attention import attn_specs
+from repro.models.blocks import (apply_block, apply_group, block_specs,
+                                 group_specs, shared_block_specs)
+from repro.models.layers import (add_positions, apply_norm, embed_specs,
+                                 embed_tokens, norm_specs, unembed)
+from repro.models.params import ParamSpec, stack_specs
+from repro.models.ssm import ssm_dims
+
+
+def _n_shared_banks(cfg: ModelConfig) -> int:
+    banks = [s.shared_bank for g in cfg.schedule for s in g.pattern
+             if s.kind == SHARED_ATTN]
+    return (max(banks) + 1) if banks else 0
+
+
+def _encoder_group(cfg: ModelConfig) -> ScheduleGroup:
+    return ScheduleGroup(pattern=(LayerSpec(ATTN),), repeats=cfg.n_encoder_layers)
+
+
+def model_specs(cfg: ModelConfig):
+    specs: Dict[str, Any] = {
+        "embed": embed_specs(cfg),
+        "final_norm": norm_specs(cfg),
+        "groups": [
+            group_specs(cfg, g, cross=cfg.is_encoder_decoder)
+            for g in cfg.schedule
+        ],
+    }
+    nb = _n_shared_banks(cfg)
+    if nb:
+        specs["shared"] = [shared_block_specs(cfg) for _ in range(nb)]
+    if cfg.is_encoder_decoder:
+        specs["encoder"] = {
+            "pos": ParamSpec((cfg.n_audio_frames, cfg.d_model), (None, "embed"),
+                             scale=0.02),
+            "group": group_specs(cfg, _encoder_group(cfg)),
+            "final_norm": norm_specs(cfg),
+        }
+    if cfg.family == "encoder":
+        d = cfg.d_model
+        specs["mlm"] = {
+            "dense": ParamSpec((d, d), ("embed", "embed2")),
+            "bias": ParamSpec((d,), ("embed",), init="zeros"),
+            "ln": norm_specs(cfg),
+            "out_bias": ParamSpec((cfg.vocab_size,), ("vocab",), init="zeros"),
+        }
+    return specs
+
+
+def _encode(params, cfg: ModelConfig, frames, **kw):
+    """frames: (B, T, d) stub frontend output (see DESIGN.md carve-out)."""
+    h = frames + params["encoder"]["pos"].astype(frames.dtype)[None]
+    positions = jnp.arange(frames.shape[1])[None]
+    h, _, _ = apply_group(
+        params["encoder"]["group"], None, h, cfg, _encoder_group(cfg),
+        positions=positions, mode="train", causal=False, **kw,
+    )
+    return apply_norm(params["encoder"]["final_norm"], h, cfg)
+
+
+def head_apply(params, h, cfg: ModelConfig):
+    """Unembedding head on a (B, S_chunk, d) slice (chunked-loss path)."""
+    if cfg.family == "encoder":
+        m = params["mlm"]
+        x = jax.nn.gelu(h @ m["dense"].astype(h.dtype) + m["bias"].astype(h.dtype))
+        x = apply_norm(m["ln"], x, cfg)
+        logits = x @ params["embed"]["tokens"].astype(h.dtype).T
+        return logits.astype(jnp.float32) + m["out_bias"].astype(jnp.float32)
+    return unembed(params["embed"], h, cfg)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
+            cache=None, use_pallas: bool = False, remat: bool = False,
+            dist=None, moe_ctx=None, constrain: Optional[Callable] = None,
+            act_dtype=jnp.float32, return_hidden: bool = False,
+            shard_ctx=None):
+    """Returns (logits | hidden, new_cache, aux).
+
+    batch keys: tokens (B,S) [decode: (B,1)], optional image_embeds,
+    audio_frames, pos (decode write index, scalar int32).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = batch.get("pos")
+    causal = cfg.family != "encoder"
+
+    h = embed_tokens(params["embed"], tokens, cfg, act_dtype)
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+    h = add_positions(params["embed"], h, positions, cfg)
+
+    if cfg.n_image_tokens and mode != "decode":
+        img = batch["image_embeds"].astype(h.dtype)  # (B, n_img, d) stub
+        h = jax.lax.dynamic_update_slice(h, img, (0, 0, 0))
+
+    encoder_out = None
+    if cfg.is_encoder_decoder and mode != "decode":
+        encoder_out = _encode(params, cfg, batch["audio_frames"].astype(h.dtype),
+                              remat=remat, use_pallas=use_pallas,
+                              constrain=constrain)
+
+    shared = params.get("shared")
+    aux = jnp.zeros((), jnp.float32)
+    new_cache_groups = []
+    for gi, group in enumerate(cfg.schedule):
+        cache_g = cache["groups"][gi] if cache is not None else None
+        h, ncg, a = apply_group(
+            params["groups"][gi], shared, h, cfg, group,
+            positions=positions, mode=mode, cache_g=cache_g, pos=pos,
+            encoder_out=encoder_out, causal=causal, remat=remat,
+            use_pallas=use_pallas, dist=dist, moe_ctx=moe_ctx,
+            constrain=constrain, shard_ctx=shard_ctx,
+        )
+        aux = aux + a
+        new_cache_groups.append(ncg)
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"groups": new_cache_groups}
+    if return_hidden:
+        return h, new_cache, aux
+    if mode == "prefill":
+        h = h[:, -1:]  # only the last position's logits are needed
+    logits = head_apply(params, h, cfg)
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Abstract cache shapes (dry-run serve_step inputs)
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shapes(cfg: ModelConfig, spec: LayerSpec, B: int, S: int,
+                        dtype):
+    Hkv, D = cfg.n_kv_heads, cfg.head_dim
+    out = {}
+    if spec.kind in (ATTN, SHARED_ATTN):
+        if spec.window is not None:
+            W = min(spec.window, S)
+            out["mixer"] = {
+                "k": ((B, W, Hkv, D), dtype),
+                "v": ((B, W, Hkv, D), dtype),
+                "pos": ((W,), jnp.int32),
+            }
+        else:
+            out["mixer"] = {
+                "k": ((B, S, Hkv, D), dtype),
+                "v": ((B, S, Hkv, D), dtype),
+            }
+    elif spec.kind == MLA:
+        m = cfg.mla
+        out["mixer"] = {
+            "ckv": ((B, S, m.kv_lora_rank), dtype),
+            "kr": ((B, S, m.qk_rope_head_dim), dtype),
+        }
+    elif spec.kind == MAMBA:
+        d_inner, H, Pd, G, N = ssm_dims(cfg)
+        K = cfg.ssm.d_conv
+        out["mixer"] = {
+            "conv_x": ((B, K - 1, H, Pd), dtype),
+            "conv_B": ((B, K - 1, G, N), dtype),
+            "conv_C": ((B, K - 1, G, N), dtype),
+            "state": ((B, H, N, Pd), jnp.float32),
+        }
+    if cfg.is_encoder_decoder and spec.kind != MAMBA:
+        out["cross"] = {
+            "k": ((B, cfg.n_audio_frames, Hkv, D), dtype),
+            "v": ((B, cfg.n_audio_frames, Hkv, D), dtype),
+        }
+    return out
+
+
+_CACHE_AXES = {
+    "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    "pos": (None,),
+    "ckv": ("batch", "cache_seq", None),
+    "kr": ("batch", "cache_seq", None),
+    "conv_x": ("batch", None, "ssm_heads", "ssm_hd"),
+    "conv_B": ("batch", None, None, None),
+    "conv_C": ("batch", None, None, None),
+    "state": ("batch", "ssm_heads", None, "ssm_hd"),
+}
+
+_WINDOW_AXES = {  # sliding-window caches are small; never shard their seq
+    "k": ("batch", None, "kv_heads", "head_dim"),
+    "v": ("batch", None, "kv_heads", "head_dim"),
+    "pos": (None,),
+}
+
+_CROSS_AXES = {
+    "k": ("batch", None, "heads", "head_dim"),
+    "v": ("batch", None, "heads", "head_dim"),
+}
+
+
+def cache_shapes(cfg: ModelConfig, B: int, S: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct cache tree matching what prefill returns, with the
+    stacked ``layers`` axis, plus the matching logical-axes tree."""
+    groups_sds, groups_axes = [], []
+    for g in cfg.schedule:
+        layers_sds, layers_axes = [], []
+        for spec in g.pattern:
+            shp = _layer_cache_shapes(cfg, spec, B, S, dtype)
+            sds = {}
+            axes = {}
+            for part, sub in shp.items():
+                sds[part] = {
+                    k: jax.ShapeDtypeStruct((g.repeats, *s), dt)
+                    for k, (s, dt) in sub.items()
+                }
+                if part == "cross":
+                    table = _CROSS_AXES
+                elif spec.window is not None and spec.kind in (ATTN, SHARED_ATTN):
+                    table = _WINDOW_AXES
+                else:
+                    table = _CACHE_AXES
+                axes[part] = {
+                    k: ("layers", *table[k]) for k in sub
+                }
+            layers_sds.append(sds)
+            layers_axes.append(axes)
+        groups_sds.append(layers_sds)
+        groups_axes.append(layers_axes)
+    return {"groups": groups_sds}, {"groups": groups_axes}

@@ -1,0 +1,2 @@
+from repro.serve.cache import pad_cache  # noqa: F401
+from repro.serve.engine import ServeEngine  # noqa: F401

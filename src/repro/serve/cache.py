@@ -1,0 +1,42 @@
+"""KV-cache utilities: pad a prefill cache out to a decode allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# cache leaves whose axis 2 (after the stacked layers axis) is the sequence:
+_SEQ_LEAVES = ("k", "v", "ckv", "kr")
+
+
+def pad_cache(cache, cfg: ModelConfig, target_len: int):
+    """Pad every full-attention / MLA cache leaf to ``target_len`` along the
+    sequence axis.  Sliding-window ring buffers, SSM states and cross-attn
+    caches are fixed-size and pass through unchanged."""
+
+    def walk_layer(spec_window, layer_cache):
+        out = {}
+        for part, sub in layer_cache.items():
+            if part == "cross" or (part == "mixer" and "pos" in sub):
+                out[part] = sub  # cross-attn / sliding ring: fixed size
+                continue
+            new = {}
+            for k, v in sub.items():
+                if k in _SEQ_LEAVES and part == "mixer":
+                    S = v.shape[2]
+                    if S < target_len:
+                        pad = [(0, 0)] * v.ndim
+                        pad[2] = (0, target_len - S)
+                        v = jnp.pad(v, pad)
+                new[k] = v
+            out[part] = new
+        return out
+
+    new_groups = []
+    for gi, g in enumerate(cfg.schedule):
+        layers = []
+        for pi, spec in enumerate(g.pattern):
+            layers.append(walk_layer(spec.window, cache["groups"][gi][pi]))
+        new_groups.append(layers)
+    return {"groups": new_groups}

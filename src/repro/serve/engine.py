@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill a batch of prompts, then decode tokens
+step by step against the (optionally sequence-sharded) KV cache."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models.model import Model
+from repro.serve.cache import pad_cache
+from repro.train.train_step import make_decode_step, make_prefill_step
+
+
+@dataclass
+class ServeEngine:
+    model: Model
+    run: RunConfig
+    mesh: Optional[Any] = None
+    dist_cache: bool = False
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.model, self.run,
+                                                  self.mesh))
+        self._decode = None
+        self._decode_b = None
+
+    def _decode_fn(self, batch_size: int):
+        if self._decode is None or self._decode_b != batch_size:
+            self._decode = jax.jit(
+                make_decode_step(self.model, self.run, self.mesh,
+                                 dist_cache=self.dist_cache,
+                                 global_batch=batch_size),
+                donate_argnums=(1,))
+            self._decode_b = batch_size
+        return self._decode
+
+    def generate(self, params, batch: Dict[str, Any], *, max_new: int,
+                 temperature: float = 0.0, seed: int = 0) -> jnp.ndarray:
+        """batch: prompt inputs (tokens (B,S0) + modality extras).
+        Returns (B, max_new) generated token ids."""
+        tokens = batch["tokens"]
+        B, S0 = tokens.shape
+        logits, cache = self._prefill(params, batch)
+        cache = pad_cache(cache, self.model.cfg, S0 + max_new)
+        decode = self._decode_fn(B)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits[:, -1], temperature, key)
+        for t in range(max_new):
+            out.append(tok)
+            if t == max_new - 1:
+                break
+            logits, cache = decode(params, cache, tok, jnp.int32(S0 + t))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], temperature, sub)
+        return jnp.concatenate(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature: float, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        g = jax.random.categorical(key, logits / temperature, axis=-1)
+        return g[:, None].astype(jnp.int32)

@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from repro.train.train_step import (abstract_state, init_state,  # noqa: F401
+                                    make_decode_step, make_prefill_step,
+                                    make_train_step, state_shardings)
+from repro.train.trainer import train  # noqa: F401

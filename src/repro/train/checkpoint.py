@@ -1,0 +1,54 @@
+"""Checkpointing: flattened-path .npz save/restore (no orbax dependency).
+
+Works on any pytree of arrays (params, optimizer state).  Multi-host
+sharded saves would add a process-index suffix per shard; on this
+single-process container the full tree is materialized to host memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16: lossless upcast
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, step: int | None = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"n_arrays": len(flat), "step": step}
+    with open(re.sub(r"\.npz$", "", path) + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a pytree template)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

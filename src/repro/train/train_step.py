@@ -1,0 +1,283 @@
+"""pjit train / prefill / decode step builders.
+
+``make_train_step`` returns a jit-able function with in/out shardings
+derived from the sharding rules (DESIGN.md §5); this is the function the
+multi-pod dry-run lowers and the trainer executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.accum import accumulate_grads
+from repro.core.mlm import lm_loss, mlm_loss
+from repro.distributed import sharding as shd
+from repro.models.attention import DistDecode
+from repro.models.model import Model
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def _act_dtype(run: RunConfig):
+    return jnp.dtype(run.activation_dtype)
+
+
+def _moe_ctx(model: Model, mesh: Optional[Mesh], run: RunConfig,
+             global_batch: int):
+    if model.cfg.moe is None:
+        return None
+    if mesh is None or run.sharding not in ("tp", "fsdp_tp") \
+            or "model" not in mesh.axis_names:
+        return {"impl": "dense"}
+    return {
+        "impl": "ep",
+        "mesh": mesh,
+        "batch_axes": shd.batch_axes(mesh, global_batch, run.sharding),
+        "expert_axis": "model",
+    }
+
+
+LOSS_TARGET_BYTES = 512e6  # per-device f32 logits per loss block
+
+
+def loss_chunk_len(global_batch: int, seq: int, vocab: int,
+                   n_batch_shards: int) -> int:
+    """Seq positions per loss block so per-device f32 logits stay ~512MB.
+    Chunking along SEQ preserves the batch sharding (chunking flattened
+    global tokens would serialize the loss across devices)."""
+    b_loc = max(1, global_batch // max(1, n_batch_shards))
+    per_pos = b_loc * vocab * 4.0
+    c = int(LOSS_TARGET_BYTES // per_pos)
+    return max(8, min(seq, c))
+
+
+def chunked_xent(params, h, labels, loss_mask, cfg, *, chunk: int = 512,
+                 use_pallas: bool = False):
+    """Streaming loss: unembed + log-softmax one seq block at a time, never
+    materializing the full (B, S, V) logits.  With ``use_pallas`` the
+    per-block nll comes from the fused_xent Pallas kernel (no (c, V)
+    log-prob temp at all); otherwise the jnp analogue.
+    Returns (sum_nll, sum_correct, denom)."""
+    from repro.models.transformer import head_apply
+
+    B, S, d = h.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        loss_mask = jnp.pad(loss_mask, ((0, 0), (0, pad)))
+    n = (S + pad) // c
+
+    @jax.checkpoint
+    def one(carry, xs):
+        hb, lb, mb = xs
+        logits = head_apply(params, hb, cfg)
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            V = logits.shape[-1]
+            with jax.named_scope("pallas_xent"):
+                nll = kops.xent(logits.reshape(-1, V),
+                                lb.reshape(-1)).reshape(lb.shape)
+        else:
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(lp, lb[..., None], axis=-1)[..., 0]
+        acc = (logits.argmax(-1) == lb) * mb
+        s_nll, s_acc, s_den = carry
+        return (s_nll + (nll * mb).sum(), s_acc + acc.sum(),
+                s_den + mb.sum()), None
+
+    xs = (
+        h.reshape(B, n, c, d).transpose(1, 0, 2, 3),
+        labels.reshape(B, n, c).transpose(1, 0, 2),
+        loss_mask.reshape(B, n, c).transpose(1, 0, 2),
+    )
+    (s_nll, s_acc, s_den), _ = jax.lax.scan(
+        one, (jnp.zeros((), jnp.float32),) * 3, xs)
+    return s_nll, s_acc, s_den
+
+
+def build_attn_ctx(cfg, mesh, run: RunConfig, global_batch: int,
+                   seq_len: int):
+    """Merged attention context: Pallas flash (when run.use_pallas) with
+    context-parallel constraint fallback."""
+    if mesh is None:
+        return None
+    ctx = {}
+    if run.use_pallas:
+        flash = shd.flash_attn_ctx(cfg, mesh, run.sharding, global_batch,
+                                   seq_len)
+        if flash is not None:
+            ctx["flash"] = flash
+    if "flash" not in ctx:
+        cp = shd.attn_shard_ctx(cfg, mesh, run.sharding, global_batch,
+                                seq_len)
+        if cp is not None:
+            ctx.update(cp)
+    return ctx or None
+
+
+def loss_for(model: Model, params, batch, *, run: RunConfig,
+             mesh: Optional[Mesh] = None, constrain=None, shard_ctx=None):
+    cfg = model.cfg
+    if shard_ctx is None and mesh is not None:
+        shard_ctx = build_attn_ctx(cfg, mesh, run,
+                                   batch["tokens"].shape[0],
+                                   batch["tokens"].shape[1])
+    h, _, aux = model.apply(
+        params, batch, mode="train", remat=run.remat,
+        use_pallas=run.use_pallas, act_dtype=_act_dtype(run),
+        moe_ctx=_moe_ctx(model, mesh, run, batch["tokens"].shape[0]),
+        constrain=constrain, return_hidden=True, shard_ctx=shard_ctx,
+    )
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    n_shards = 1
+    if mesh is not None:
+        import numpy as _np
+        bax = shd.batch_axes(mesh, labels.shape[0], run.sharding)
+        n_shards = int(_np.prod([mesh.shape[a] for a in bax])) if bax else 1
+    c = loss_chunk_len(labels.shape[0], labels.shape[1], cfg.vocab_size,
+                       n_shards)
+    s_nll, s_acc, s_den = chunked_xent(params, h, labels, mask, cfg,
+                                       chunk=c, use_pallas=run.use_pallas)
+    den = jnp.maximum(s_den, 1.0)
+    loss = s_nll / den
+    metrics = {"xent": loss, "acc": s_acc / den, "tokens": s_den}
+    loss = loss + aux
+    metrics["aux_loss"] = aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
+                    mesh: Optional[Mesh] = None) -> Callable:
+    """(state, batch) -> (state, metrics); state = {params, opt}."""
+    constrain = None
+    if mesh is not None:
+        constrain = shd.activation_sharding(
+            mesh, run.shape.global_batch, run.sharding)
+
+    def step(state, batch):
+        def loss_fn(p, b):
+            return loss_for(model, p, b, run=run, mesh=mesh,
+                            constrain=constrain)
+
+        loss, grads, metrics = accumulate_grads(
+            loss_fn, state["params"], batch, run.microbatch or 1)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"])
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for jit in/out_shardings
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(model: Model, mesh: Mesh, run: RunConfig):
+    drop = ("kv_heads", "head_dim") if run.replicate_kv else ()
+    return shd.tree_shardings(
+        model.param_axes(), model.abstract(jnp.dtype(run.param_dtype)),
+        mesh, run.sharding, drop_axes=drop)
+
+
+def state_shardings(model: Model, mesh: Mesh, run: RunConfig):
+    p_sh = param_shardings(model, mesh, run)
+    return {
+        "params": p_sh,
+        "opt": {"mu": p_sh, "nu": p_sh,
+                "step": NamedSharding(mesh, P())},
+    }
+
+
+def batch_shardings(model: Model, mesh: Mesh, run: RunConfig,
+                    shape: ShapeConfig):
+    bspec = shd.batch_spec(mesh, shape.global_batch, run.sharding)
+    ns = lambda ndim: NamedSharding(
+        mesh, P(bspec[0], *([None] * (ndim - 1))))
+    specs = model.input_specs(shape, act_dtype=_act_dtype(run))
+    out = {}
+    for k, v in specs.items():
+        out[k] = NamedSharding(mesh, P()) if v.ndim == 0 else ns(v.ndim)
+    return out
+
+
+def abstract_state(model: Model, run: RunConfig):
+    params = model.abstract(jnp.dtype(run.param_dtype))
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {
+        "params": params,
+        "opt": {"mu": f32(params), "nu": f32(params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+
+
+def init_state(model: Model, key, run: RunConfig):
+    params = model.init(key, jnp.dtype(run.param_dtype))
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+# ---------------------------------------------------------------------------
+# Serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(model: Model, run: RunConfig,
+                      mesh: Optional[Mesh] = None) -> Callable:
+    def prefill(params, batch):
+        shard_ctx = build_attn_ctx(model.cfg, mesh, run,
+                                   batch["tokens"].shape[0],
+                                   batch["tokens"].shape[1])
+        constrain = None
+        if run.seq_parallel_serve and mesh is not None \
+                and "model" in mesh.axis_names \
+                and batch["tokens"].shape[1] % mesh.shape["model"] == 0:
+            constrain = shd.activation_sharding(
+                mesh, batch["tokens"].shape[0], run.sharding,
+                seq_axis="model")
+        logits, cache = model.prefill(
+            params, batch, use_pallas=run.use_pallas,
+            act_dtype=_act_dtype(run),
+            moe_ctx=_moe_ctx(model, mesh, run, batch["tokens"].shape[0]),
+            shard_ctx=shard_ctx, constrain=constrain,
+        )
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_step(model: Model, run: RunConfig,
+                     mesh: Optional[Mesh] = None,
+                     dist_cache: bool = False,
+                     global_batch: Optional[int] = None) -> Callable:
+    dist = None
+    if dist_cache and mesh is not None:
+        dist = DistDecode(
+            axes=shd.cache_seq_axes(mesh, global_batch or 1),
+            batch_axes=shd.cache_batch_axes(mesh, global_batch or 1),
+            mesh=mesh,
+        )
+
+    def decode(params, cache, tokens, pos):
+        batch = {"tokens": tokens, "pos": pos}
+        logits, new_cache, _ = model.apply(
+            params, batch, mode="decode", cache=cache,
+            act_dtype=_act_dtype(run), dist=dist,
+            moe_ctx=_moe_ctx(model, mesh, run, tokens.shape[0]),
+        )
+        return logits, new_cache
+
+    return decode

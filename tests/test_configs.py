@@ -1,0 +1,126 @@
+"""Config registry: exact assigned numbers + published param counts."""
+import pytest
+
+from repro.configs import ARCHS, get_config, list_archs, reduced
+from repro.core.scaling import param_count
+
+ASSIGNED = {
+    "mamba2-130m": dict(layers=24, d_model=768, vocab=50280),
+    "gemma2-27b": dict(layers=46, d_model=4608, heads=32, kv=16,
+                       ff=36864, vocab=256000),
+    "deepseek-v2-lite-16b": dict(layers=27, d_model=2048, heads=16,
+                                 vocab=102400),
+    "qwen2-72b": dict(layers=80, d_model=8192, heads=64, kv=8, ff=29568,
+                      vocab=152064),
+    "zamba2-2.7b": dict(d_model=2560, heads=32, kv=32, ff=10240,
+                        vocab=32000),
+    "starcoder2-3b": dict(layers=30, d_model=3072, heads=24, kv=2,
+                          ff=12288, vocab=49152),
+    "whisper-small": dict(layers=12, d_model=768, heads=12, kv=12, ff=3072,
+                          vocab=51865),
+    "phi3.5-moe-42b-a6.6b": dict(layers=32, d_model=4096, heads=32, kv=8,
+                                 vocab=32064),
+    "llava-next-mistral-7b": dict(layers=32, d_model=4096, heads=32, kv=8,
+                                  ff=14336, vocab=32000),
+    "gemma3-4b": dict(layers=34, d_model=2560, heads=8, kv=4, ff=10240,
+                      vocab=262144),
+}
+
+# published sizes (±12%: embeddings/heads counted differently across cards)
+PUBLISHED_PARAMS = {
+    "mamba2-130m": 0.13e9,
+    "gemma2-27b": 27.2e9,
+    "deepseek-v2-lite-16b": 15.7e9,
+    "qwen2-72b": 72.7e9,
+    "zamba2-2.7b": 2.7e9,
+    "starcoder2-3b": 3.0e9,
+    "whisper-small": 0.244e9,
+    "phi3.5-moe-42b-a6.6b": 41.9e9,
+    "llava-next-mistral-7b": 7.24e9,
+    "gemma3-4b": 3.88e9,
+    "bert-mlm-120m": 0.12e9,
+    "bert-mlm-350m": 0.35e9,
+}
+
+ACTIVE_PARAMS = {
+    "deepseek-v2-lite-16b": 2.7e9,   # ~2.4B card value + embeddings
+    "phi3.5-moe-42b-a6.6b": 6.6e9,
+    "mixtral-8x7b": 12.9e9,
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_exact_assigned_numbers(arch):
+    cfg = get_config(arch)
+    a = ASSIGNED[arch]
+    if "layers" in a:
+        if arch == "whisper-small":
+            assert cfg.n_layers == a["layers"]
+            assert cfg.n_encoder_layers == 12
+        else:
+            assert cfg.n_layers == a["layers"], (cfg.n_layers, a)
+    assert cfg.d_model == a["d_model"]
+    assert cfg.vocab_size == a["vocab"]
+    if "heads" in a:
+        assert cfg.n_heads == a["heads"]
+    if "kv" in a:
+        assert cfg.n_kv_heads == a["kv"]
+    if "ff" in a:
+        assert cfg.d_ff == a["ff"]
+    assert cfg.source, "every config must cite its source"
+
+
+def test_zamba2_counts():
+    cfg = get_config("zamba2-2.7b")
+    kinds = [s.kind for g in cfg.schedule for s in g.pattern
+             for _ in range(1)]
+    n_mamba = sum(g.repeats * sum(1 for s in g.pattern if s.kind == "mamba")
+                  for g in cfg.schedule)
+    n_shared = sum(g.repeats * sum(1 for s in g.pattern
+                                   if s.kind == "shared_attn")
+                   for g in cfg.schedule)
+    assert n_mamba == 54
+    assert n_shared == 9
+    assert cfg.ssm.d_state == 64
+
+
+def test_deepseek_moe_spec():
+    cfg = get_config("deepseek-v2-lite-16b")
+    assert cfg.moe.n_experts == 64 and cfg.moe.top_k == 6
+    assert cfg.moe.n_shared == 2 and cfg.moe.expert_ff == 1408
+    assert cfg.mla.kv_lora_rank == 512
+    assert cfg.mla.qk_rope_head_dim == 64
+
+
+def test_gemma3_pattern():
+    cfg = get_config("gemma3-4b")
+    g0 = cfg.schedule[0]
+    wins = [s.window for s in g0.pattern]
+    assert wins == [1024] * 5 + [None]
+    assert g0.repeats == 5
+    assert cfg.schedule[1].n_layers == 4  # remainder local layers
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED_PARAMS))
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    n = param_count(cfg)
+    pub = PUBLISHED_PARAMS[arch]
+    assert abs(n - pub) / pub < 0.25, (arch, n / 1e9, pub / 1e9)
+
+
+@pytest.mark.parametrize("arch", sorted(ACTIVE_PARAMS))
+def test_active_param_counts(arch):
+    cfg = get_config(arch)
+    n = param_count(cfg, active_only=True)
+    pub = ACTIVE_PARAMS[arch]
+    assert abs(n - pub) / pub < 0.15, (arch, n / 1e9)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_variants_are_small(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 4
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4

@@ -1,0 +1,103 @@
+"""Data pipeline (R1-R3): tokenizer, packing, staging, prefetch loader."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (ByteBPETokenizer, NetworkFS, PrefetchLoader,
+                        StagedDataset, measure_throughput, pack_corpus,
+                        read_raw_corpus, size_reduction, tune_workers,
+                        write_raw_corpus)
+from repro.data.tokenizer import CLS, PAD, SEP
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    d = tmp_path_factory.mktemp("corpus")
+    raw = str(d / "raw.jsonl")
+    nbytes = write_raw_corpus(raw, 400, seed=0)
+    fns = list(read_raw_corpus(raw))
+    tok = ByteBPETokenizer.train(fns[:40], max_merges=120)
+    shards = pack_corpus(iter(fns), tok, str(d / "packed"), seq_len=128,
+                         shard_examples=256)
+    return dict(dir=d, raw=raw, nbytes=nbytes, fns=fns, tok=tok,
+                shards=shards)
+
+
+def test_tokenizer_roundtrip(corpus):
+    tok = corpus["tok"]
+    for fn in corpus["fns"][:20]:
+        assert tok.decode(tok.encode(fn)) == fn
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=400))
+def test_tokenizer_roundtrip_property(data):
+    tok = ByteBPETokenizer(merges=[(4 + 0x55, 4 + 0x48), (260, 4 + 0x89)])
+    assert tok.decode(tok.encode(data)) == data
+
+
+def test_tokenizer_save_load(corpus, tmp_path):
+    tok = corpus["tok"]
+    p = str(tmp_path / "tok.json")
+    tok.save(p)
+    tok2 = ByteBPETokenizer.load(p)
+    fn = corpus["fns"][0]
+    assert tok2.encode(fn) == tok.encode(fn)
+
+
+def test_r1_packing_reduces_size(corpus):
+    red = size_reduction(corpus["nbytes"], corpus["shards"])
+    # the paper reports 99%; our synthetic metadata ratio gives >85%
+    assert red > 0.85, red
+
+
+def test_packed_rows_shape_and_specials(corpus):
+    toks, mask = corpus["shards"][0].load()
+    assert toks.dtype == np.uint16 and mask.dtype == np.uint8
+    assert toks.shape[1] == 128
+    assert (toks[:, 0] == CLS).all()
+    # mask marks non-pad
+    assert ((toks == PAD) == (mask == 0)).mean() > 0.99
+
+
+def test_r2_staging_copies_and_unthrottles(corpus, tmp_path):
+    ds = StagedDataset(list(corpus["shards"]),
+                       network=NetworkFS(agg_bw=1e9, readers=16),
+                       local_dir=str(tmp_path / "local"))
+    assert ds.network is not None
+    t = ds.stage()
+    assert ds.staged and ds.network is None and t > 0
+    toks, mask = ds.read_shard(0)
+    assert toks.shape[1] == 128
+    for s in ds.shards:
+        assert str(tmp_path) in s.tokens_path
+
+
+def test_r3_loader_yields_batches(corpus):
+    ds = StagedDataset(list(corpus["shards"]))
+    loader = PrefetchLoader(ds, batch_size=16, n_workers=2).start()
+    it = iter(loader)
+    for _ in range(5):
+        b = next(it)
+        assert b["tokens"].shape == (16, 128)
+        assert b["tokens"].dtype == np.int32
+    loader.stop()
+
+
+def test_r3_more_workers_help_when_step_is_fast(corpus):
+    ds = StagedDataset(list(corpus["shards"]))
+    m1 = measure_throughput(ds, 16, 1, n_batches=30, step_time_s=0.001)
+    m4 = measure_throughput(ds, 16, 4, n_batches=30, step_time_s=0.001)
+    # utilization must not degrade with more workers
+    assert m4["utilization"] >= m1["utilization"] - 0.15
+
+
+def test_r3_tuner_stops_at_target(corpus):
+    ds = StagedDataset(list(corpus["shards"]))
+    out = tune_workers(ds, 16, step_time_s=0.004, max_workers=4,
+                       target_util=0.5, n_batches=12)
+    assert 1 <= out["chosen"] <= 4
+    assert out["history"][-1]["utilization"] >= 0.5 or \
+        out["chosen"] == 4

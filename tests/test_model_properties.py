@@ -1,0 +1,193 @@
+"""Model-level invariants and architectural fidelity properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+from repro.models.attention import apply_mla, build_mask
+from repro.models.layers import apply_rope, rope_freqs, softcap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32))
+    pos = jnp.arange(16)[None]
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+        rtol=1e-5)
+
+
+def test_rope_relative_positions():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 1e4)[0, 0, 0]
+        kj = apply_rope(k, jnp.array([[j]]), 1e4)[0, 0, 0]
+        return float(qi @ kj)
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(12, 10), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(100, 60), dot_at(140, 100), rtol=1e-4)
+
+
+def test_rope_zero_position_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 2, 16))
+    y = apply_rope(x, jnp.zeros((1, 1), jnp.int32), 1e4)
+    np.testing.assert_allclose(x, y, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# softcap / masks
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-1e4, 1e4), st.sampled_from([20.0, 30.0, 50.0]))
+def test_softcap_bounds(x, cap):
+    y = float(softcap(jnp.float32(x), cap))
+    assert -cap <= y <= cap
+    # monotone through zero, sign preserved
+    assert y == 0 or (y > 0) == (x > 0)
+
+
+def test_mask_window_and_causal():
+    m = build_mask(8, 8, causal=True, window=3)[0, 0]
+    vis = (m == 0.0)
+    for i in range(8):
+        for j in range(8):
+            assert bool(vis[i, j]) == (j <= i and j > i - 3), (i, j)
+
+
+# ---------------------------------------------------------------------------
+# Architectural fidelity
+# ---------------------------------------------------------------------------
+
+
+def test_zamba2_shared_banks_are_actually_shared():
+    """Two invocations of bank-0 must use the SAME parameters: perturbing
+    the bank changes every shared-attn application."""
+    cfg = get_config("zamba2-2.7b")
+    from repro.models.transformer import model_specs
+
+    specs = model_specs(cfg)
+    assert len(specs["shared"]) == 2  # banks A and B
+    # per-layer pattern positions for shared blocks carry no params
+    g0 = specs["groups"][0]
+    shared_positions = [i for i, s in enumerate(cfg.schedule[0].pattern)
+                        if s.kind == "shared_attn"]
+    for i in shared_positions:
+        assert g0[i] == {}, "shared positions must not own parameters"
+
+
+def test_gemma2_alternates_local_global():
+    cfg = get_config("gemma2-27b")
+    pat = cfg.schedule[0].pattern
+    assert pat[0].window == 4096 and pat[1].window is None
+    assert cfg.schedule[0].repeats == 23
+
+
+def test_mla_absorbed_decode_equals_expanded():
+    """The absorbed-latent decode scores must equal the expanded form."""
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # pull one MLA layer's params (group 0, position 0, layer 0)
+    p = jax.tree_util.tree_map(lambda x: x[0],
+                               params["groups"][0][0]["mixer"])
+    h = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 12, cfg.d_model))
+    pos = jnp.arange(12)[None]
+    from repro.configs.base import LayerSpec, MLA
+
+    spec = LayerSpec(kind=MLA)
+    out_full, cache = apply_mla(p, h, cfg, spec, positions=pos,
+                                mode="prefill")
+    # decode the last position against the cache of the first 11
+    cache11 = {k: v[:, :12] for k, v in cache.items()}
+    # rebuild an 11-token cache then decode token 11
+    out11, cache11 = apply_mla(p, h[:, :11], cfg, spec,
+                               positions=pos[:, :11], mode="prefill")
+    cache11 = {k: jnp.pad(v, ((0, 0), (0, 1), (0, 0))) for k, v in
+               cache11.items()}
+    dec, _ = apply_mla(p, h[:, 11:12], cfg, spec, positions=None,
+                       mode="decode", cache=cache11, pos=11)
+    rel = float(jnp.abs(dec[:, 0] - out_full[:, 11]).max()
+                / (jnp.abs(out_full[:, 11]).max() + 1e-9))
+    assert rel < 1e-4, rel
+
+
+def test_vlm_image_prefix_changes_output():
+    cfg = reduced(get_config("llava-next-mistral-7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 40), 4,
+                              cfg.vocab_size)
+    img1 = 0.1 * jax.random.normal(jax.random.PRNGKey(2),
+                                   (1, cfg.n_image_tokens, cfg.d_model))
+    l1, _, _ = model.apply(params, {"tokens": toks, "image_embeds": img1},
+                           mode="train")
+    l2, _, _ = model.apply(params, {"tokens": toks, "image_embeds": 2 * img1},
+                           mode="train")
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3  # image actually used
+
+
+def test_whisper_encoder_output_feeds_decoder():
+    cfg = reduced(get_config("whisper-small"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 4,
+                              cfg.vocab_size)
+    fr1 = 0.1 * jax.random.normal(jax.random.PRNGKey(2),
+                                  (1, cfg.n_audio_frames, cfg.d_model))
+    l1, _, _ = model.apply(params, {"tokens": toks, "audio_frames": fr1},
+                           mode="train")
+    l2, _, _ = model.apply(params, {"tokens": toks, "audio_frames": -fr1},
+                           mode="train")
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+def test_encoder_family_is_bidirectional():
+    """BERT MLM must see future tokens (unlike causal LMs)."""
+    cfg = reduced(get_config("bert-mlm-120m"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 4,
+                              cfg.vocab_size)
+    l1, _, _ = model.apply(params, {"tokens": toks}, mode="train")
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 7) % cfg.vocab_size)
+    l2, _, _ = model.apply(params, {"tokens": toks2}, mode="train")
+    # changing the LAST token changes the FIRST position's logits
+    assert float(jnp.abs(l1[0, 0] - l2[0, 0]).max()) > 1e-5
+
+
+def test_causal_lm_ignores_future():
+    cfg = reduced(get_config("starcoder2-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 4,
+                              cfg.vocab_size)
+    l1, _, _ = model.apply(params, {"tokens": toks}, mode="train")
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 7) % cfg.vocab_size)
+    l2, _, _ = model.apply(params, {"tokens": toks2}, mode="train")
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], atol=1e-5)
+
+
+def test_mamba_state_carries_long_range_information():
+    cfg = reduced(get_config("mamba2-130m"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 4,
+                              cfg.vocab_size)
+    l1, _, _ = model.apply(params, {"tokens": toks}, mode="train")
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab_size)
+    l2, _, _ = model.apply(params, {"tokens": toks2}, mode="train")
+    # token 0 influences the last position through the recurrent state
+    assert float(jnp.abs(l1[0, -1] - l2[0, -1]).max()) > 1e-6

@@ -1,0 +1,95 @@
+"""Sharding rules: divisibility fallbacks, batch axis selection, cache
+rules — pure logic on a mesh built from an abstract (CPU) device list."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape / .axis_names are consulted."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_tp_heads_divisible():
+    spec = shd.spec_for(("embed", "heads", "head_dim"), (4096, 32, 128),
+                        shd.RULES["fsdp_tp"], MESH)
+    assert spec == P("data", "model")  # trailing None trimmed
+
+
+def test_tp_kv_fallback_to_head_dim():
+    # kv_heads=8 does not divide 16 -> falls back to head_dim
+    spec = shd.spec_for(("embed", "kv_heads", "head_dim"), (4096, 8, 128),
+                        shd.RULES["fsdp_tp"], MESH)
+    assert spec == P("data", None, "model")
+
+
+def test_no_double_use_of_mesh_axis():
+    spec = shd.spec_for(("heads", "head_dim"), (32, 128),
+                        shd.RULES["tp"], MESH)
+    assert spec == P("model")  # head_dim must NOT also take 'model'
+
+
+def test_ddp_replicates_params():
+    spec = shd.spec_for(("embed", "ff"), (1024, 4096),
+                        shd.RULES["ddp"], MESH)
+    assert spec == P()
+
+
+def test_indivisible_dim_replicated():
+    spec = shd.spec_for(("vocab", "embed"), (50280, 768),
+                        shd.RULES["tp"], MESH)  # 50280 % 16 != 0
+    assert spec == P()
+
+
+def test_batch_axes_prefix_rules():
+    assert shd.batch_axes(MESH, 256, "ddp") == ("data", "model")
+    assert shd.batch_axes(MESH, 256, "fsdp_tp") == ("data",)
+    assert shd.batch_axes(MESH, 32, "fsdp_tp") == ("data",)
+    assert shd.batch_axes(MESH, 1, "fsdp_tp") == ()
+    assert shd.batch_axes(MESH3, 256, "ddp") == ("pod", "data")  # 512 nope
+    assert shd.batch_axes(MESH3, 512, "ddp") == ("pod", "data", "model")
+
+
+def test_cache_rules_decode_32k():
+    rules = shd.cache_rules(MESH, 128, "tp")
+    spec = shd.spec_for(("layers", "batch", "cache_seq", "kv_heads",
+                         "head_dim"), (80, 128, 32768, 8, 128), rules, MESH)
+    assert spec[1] == "data" and spec[2] == "model"
+
+
+def test_cache_rules_long_batch1():
+    rules = shd.cache_rules(MESH, 1, "tp")
+    spec = shd.spec_for(("layers", "batch", "cache_seq", "kv_heads",
+                         "head_dim"), (23, 1, 524288, 16, 128), rules, MESH)
+    # batch unshardable -> seq takes both axes
+    assert spec[2] == ("data", "model")
+
+
+def test_cache_seq_axes_helper():
+    assert shd.cache_seq_axes(MESH, 128) == ("model",)
+    assert shd.cache_seq_axes(MESH, 1) == ("data", "model")
+
+
+def test_attn_shard_ctx_gating():
+    from repro.configs import get_config
+
+    gemma3 = get_config("gemma3-4b")      # kv=4 % 16 != 0 -> CP on
+    gemma2 = get_config("gemma2-27b")     # kv=16 -> head-parallel, CP off
+    ds = get_config("deepseek-v2-lite-16b")  # MLA -> off
+    assert shd.attn_shard_ctx(gemma2, MESH, "fsdp_tp", 256, 4096) is None
+    assert shd.attn_shard_ctx(ds, MESH, "fsdp_tp", 256, 4096) is None
+    ctx = shd.attn_shard_ctx(gemma3, MESH, "fsdp_tp", 256, 4096)
+    assert ctx is not None and set(ctx) == {"q", "kv"}
+    assert shd.attn_shard_ctx(gemma3, MESH, "ddp", 256, 4096) is None
+    # indivisible sequence -> off
+    assert shd.attn_shard_ctx(gemma3, MESH, "fsdp_tp", 256, 4097) is None

@@ -1,0 +1,96 @@
+"""End-to-end behaviour: the paper's full pipeline — synthesize corpus,
+tokenize+pack (R1), stage (R2), tuned prefetch loading (R3), MLM pretrain
+the BERT model, checkpoint, and measure that loss drops."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core.mlm import mask_tokens
+from repro.data import (ByteBPETokenizer, NetworkFS, StagedDataset,
+                        PrefetchLoader, pack_corpus, read_raw_corpus,
+                        size_reduction, write_raw_corpus)
+from repro.models import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import train
+
+
+@pytest.mark.slow
+def test_end_to_end_mlm_pretraining(tmp_path):
+    # ---- R1: raw corpus -> packed token shards -------------------------
+    raw = str(tmp_path / "raw.jsonl")
+    nbytes = write_raw_corpus(raw, 600, seed=0)
+    fns = list(read_raw_corpus(raw))
+    tok = ByteBPETokenizer.train(fns[:40], vocab_size=1024, max_merges=100)
+    shards = pack_corpus(iter(fns), tok, str(tmp_path / "packed"),
+                         seq_len=64, shard_examples=512)
+    assert size_reduction(nbytes, shards) > 0.8
+
+    # ---- R2: stage network -> local --------------------------------------
+    ds = StagedDataset(shards, network=NetworkFS(agg_bw=5e9, readers=4),
+                       local_dir=str(tmp_path / "local"))
+    ds.stage()
+
+    # ---- R3: prefetch loader with MLM masking as worker CPU work ------
+    cfg = reduced(get_config("bert-mlm-120m"), d_model=128)
+    cfg_vocab = 1024
+    cfg = dataclasses.replace(cfg, vocab_size=cfg_vocab, max_position=64)
+
+    def mlm_work(batch, rng):
+        key = jax.random.PRNGKey(int(rng.integers(1 << 30)))
+        inputs, labels, mask = mask_tokens(
+            key, jnp.asarray(batch["tokens"]), cfg_vocab, mask_id=3)
+        return {"tokens": np.asarray(inputs), "labels": np.asarray(labels),
+                "loss_mask": np.asarray(mask * batch["attn_mask"])}
+
+    loader = PrefetchLoader(ds, batch_size=16, n_workers=2,
+                            work_fn=mlm_work).start()
+
+    # ---- train ----------------------------------------------------------
+    model = build_model(cfg)
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 64, 16, "train"),
+                    sharding="ddp", param_dtype="float32",
+                    activation_dtype="float32")
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                      weight_decay=0.01)
+    state, log = train(model, run, opt, loader, steps=40, log_every=10,
+                       ckpt_path=str(tmp_path / "ck"), ckpt_every=0)
+    loader.stop()
+    first, last = log.metrics[0]["xent"], log.metrics[-1]["xent"]
+    assert last < first - 0.2, (first, last)
+
+    # ---- checkpoint restore continues identically ------------------------
+    back = ckpt.restore(str(tmp_path / "ck"), state)
+    for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
+                    jax.tree_util.tree_leaves(back["params"])):
+        np.testing.assert_array_equal(np.float32(a), np.float32(b))
+
+
+def test_cache_shapes_match_prefill_structure():
+    """The dry-run's abstract cache tree must exactly mirror what prefill
+    actually returns (structure and shapes), for every family."""
+    for arch in ["gemma3-4b", "mamba2-130m", "zamba2-2.7b",
+                 "deepseek-v2-lite-16b", "whisper-small"]:
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, S = 2, 32
+        batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["audio_frames"] = jnp.zeros((B, cfg.n_audio_frames,
+                                               cfg.d_model))
+        _, cache = model.prefill(params, batch)
+        abs_cache, _ = model.cache_shapes(B, S, jnp.float32)
+        real_flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+        abs_flat = jax.tree_util.tree_flatten_with_path(abs_cache)[0]
+        assert len(real_flat) == len(abs_flat), arch
+        for (pr, vr), (pa, va) in zip(real_flat, abs_flat):
+            assert str(pr) == str(pa), (arch, pr, pa)
+            assert tuple(vr.shape) == tuple(va.shape), (arch, pr, vr.shape,
+                                                        va.shape)
