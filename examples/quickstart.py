@@ -24,9 +24,10 @@ from repro.core.mlm import mask_tokens
 from repro.data import (ByteBPETokenizer, NetworkFS, PrefetchLoader,
                         StagedDataset, pack_corpus, read_raw_corpus,
                         size_reduction, write_raw_corpus)
+from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.train.optimizer import AdamWConfig
-from repro.train.trainer import train
+from repro.train.runner import StepRunner, TrainLoop
 
 SEQ, BATCH, STEPS = 64, 16, 60
 
@@ -60,14 +61,24 @@ with tempfile.TemporaryDirectory() as tmp:
 
     loader = PrefetchLoader(ds, BATCH, n_workers=2, work_fn=mlm_work).start()
 
+    # train through the sharding-aware async runner: one compile with
+    # explicit shardings + donated state, device-prefetched batches,
+    # non-blocking metrics
     model = build_model(cfg)
     run = RunConfig(model=cfg, shape=ShapeConfig("q", SEQ, BATCH, "train"),
                     sharding="ddp", param_dtype="float32",
                     activation_dtype="float32")
     opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=STEPS)
-    state, log = train(model, run, opt, loader, steps=STEPS, log_every=10)
+    runner = StepRunner(model, run, opt, make_host_mesh())
+    state, log = TrainLoop(runner, log_every=10).run(loader, STEPS)
     loader.stop()
-    for s, m in zip(log.steps, log.metrics):
-        print(f"step {s:3d}  mlm_xent={m['xent']:.4f}  acc={m['acc']:.3f}")
+    for s, m, tps in zip(log.steps, log.metrics, log.tokens_per_s):
+        print(f"step {s:3d}  mlm_xent={m['xent']:.4f}  acc={m['acc']:.3f}"
+              f"  tokens/s={tps:.0f}")
+    t = log.telemetry
+    print(f"telemetry: step_ema={t['step_time_ema']*1e3:.1f}ms  "
+          f"host_stall={t['stall_fraction']*100:.1f}%  "
+          f"compiles={t['n_traces']:.0f}")
     assert log.metrics[-1]["xent"] < log.metrics[0]["xent"]
+    assert t["n_traces"] == 1, "train step must compile exactly once"
     print("quickstart OK: loss decreased")

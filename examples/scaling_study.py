@@ -1,17 +1,23 @@
-"""Reproduces the paper's scaling analysis (Fig. 1 + R4/R5) analytically.
+"""Reproduces the paper's scaling analysis (Fig. 1 + R4/R5) analytically,
+then measures the async training loop's telemetry on this host.
 
 Prints samples/s vs worker count for the 120M and 350M MLM models on the
 paper's hardware (H100-NVL, 25 GbE) and on the TPU v5e target, plus the
-R5 max-batch table.
+R5 max-batch table, and finally a measured run through the sharding-aware
+StepRunner/TrainLoop (step-time EMA, tokens/s, hlocost-MFU, host-stall
+fraction).
 
   PYTHONPATH=src python examples/scaling_study.py
 """
+import dataclasses
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import get_config
+import numpy as np
+
+from repro.configs import get_config, reduced
 from repro.core import (DPScalingModel, H100_NVL, MemoryModel, TPU_V5E,
                         dp_scaling_curve)
 
@@ -40,3 +46,38 @@ for shards in (1, 16, 256):
     mm = MemoryModel(cfg, state_shards=shards)
     print(f"gemma3-4b seq=4096, state sharded {shards:3d}x: "
           f"max batch/device = {mm.max_batch(4096, TPU_V5E.hbm_bytes)}")
+
+print()
+print("== measured: sharding-aware async loop telemetry (CPU smoke) ==")
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.runner import StepRunner, TrainLoop
+
+B, S, STEPS = 8, 64, 12
+mcfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"), d_model=128),
+                           vocab_size=512, max_position=S)
+model = build_model(mcfg)
+run = RunConfig(model=mcfg, shape=ShapeConfig("s", S, B, "train"),
+                sharding="ddp", param_dtype="float32",
+                activation_dtype="float32")
+rng = np.random.default_rng(0)
+
+
+def batches():
+    while True:
+        toks = rng.integers(4, mcfg.vocab_size, (B, S)).astype(np.int32)
+        yield {"tokens": toks, "labels": toks,
+               "loss_mask": np.ones((B, S), np.float32)}
+
+
+runner = StepRunner(model, run, AdamWConfig(total_steps=STEPS),
+                    make_host_mesh())
+_, mlog = TrainLoop(runner, log_every=4).run(batches(), STEPS)
+t = mlog.telemetry
+print(f"bert-mlm-120m(reduced) b={B} seq={S}: "
+      f"step_ema={t['step_time_ema']*1e3:.1f}ms "
+      f"tokens/s={t['tokens_per_s']:.0f} "
+      f"host_stall={t['stall_fraction']*100:.1f}% "
+      f"mfu(v5e-peak)={mlog.mfu[-1]:.2e} compiles={t['n_traces']:.0f}")

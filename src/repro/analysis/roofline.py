@@ -182,6 +182,15 @@ class Roofline:
         return d
 
 
+def xla_cost_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized across jax versions: older
+    releases return a one-element list of dicts, newer ones a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
             sharding: str, model_flops_global: float,
             hlo_text: Optional[str] = None, pallas_cost=None) -> Roofline:
@@ -194,7 +203,7 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
     """
     from repro.analysis.hlocost import analyze_text
 
-    ca = compiled.cost_analysis()
+    ca = xla_cost_dict(compiled)
     ma = compiled.memory_analysis()
     txt = hlo_text if hlo_text is not None else compiled.as_text()
     cost = analyze_text(txt, pallas_cost)

@@ -1,4 +1,6 @@
 from repro.data.cache import NetworkFS, StagedDataset  # noqa: F401
+from repro.data.device_prefetch import (DevicePrefetch,  # noqa: F401
+                                        prefetch_to_device)
 from repro.data.corpus import (read_raw_corpus, synth_function,  # noqa: F401
                                write_raw_corpus)
 from repro.data.loader import (PrefetchLoader, measure_throughput,  # noqa: F401

@@ -1,0 +1,68 @@
+"""Double-buffered host->device prefetch (R3 extended across the PCIe/ICI
+hop).
+
+``PrefetchLoader`` keeps host batches ready; this adapter keeps *device*
+batches ready: while the accelerator runs step ``i`` the transfer for step
+``i+1`` (and up to ``size-1`` more) is already in flight, placed directly
+onto its sharded layout via ``jax.device_put`` with the per-input
+``NamedSharding`` from ``train_step.batch_shardings``.  Transfers are
+dispatched asynchronously by jax, so enqueueing never blocks the loop.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, Iterable, Iterator, Optional
+
+import jax
+
+
+class DevicePrefetch:
+    """Wrap a host-batch iterator; yield device-resident batches.
+
+    Parameters
+    ----------
+    it:        iterable of dict batches (host numpy / jax arrays).
+    shardings: optional dict mapping batch keys to ``Sharding``; keys not
+               present fall back to the default device placement.  Extra
+               sharding keys (inputs the model defines but the loader does
+               not produce) are ignored.
+    size:      number of device batches kept in flight (2 = classic
+               double buffering).
+    """
+
+    def __init__(self, it: Iterable[Dict[str, Any]], *,
+                 shardings: Optional[Dict[str, Any]] = None, size: int = 2):
+        self._it = iter(it)
+        self.shardings = shardings or {}
+        self.size = max(1, int(size))
+        self.puts = 0           # batches dispatched to the device
+
+    def _put(self, batch: Dict[str, Any]) -> Dict[str, Any]:
+        out = {}
+        for k, v in batch.items():
+            sh = self.shardings.get(k)
+            out[k] = jax.device_put(v, sh) if sh is not None \
+                else jax.device_put(v)
+        self.puts += 1
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        buf: "collections.deque" = collections.deque()
+        try:
+            while len(buf) < self.size:
+                buf.append(self._put(next(self._it)))
+        except StopIteration:
+            pass
+        while buf:
+            # dispatch the next transfer BEFORE handing out the current
+            # batch: the copy overlaps the consumer's step on ``cur``
+            try:
+                buf.append(self._put(next(self._it)))
+            except StopIteration:
+                pass
+            yield buf.popleft()
+
+
+def prefetch_to_device(it, shardings=None, size: int = 2):
+    """Functional spelling of :class:`DevicePrefetch` (flax idiom)."""
+    return iter(DevicePrefetch(it, shardings=shardings, size=size))

@@ -19,6 +19,9 @@ import numpy as np
 from repro.data.cache import StagedDataset
 
 
+_SENTINEL = object()  # queued by stop() so a blocked consumer wakes up
+
+
 class PrefetchLoader:
     def __init__(self, ds: StagedDataset, batch_size: int, *,
                  n_workers: int = 1, seq_len: Optional[int] = None,
@@ -69,20 +72,35 @@ class PrefetchLoader:
 
     def stop(self):
         self._stop.set()
+        try:
+            self._q.put_nowait(_SENTINEL)
+        except queue.Full:
+            pass  # consumer will drain to the timeout check instead
         for t in self._threads:
             t.join(timeout=2.0)
         self._threads.clear()
 
     # -- consumer ----------------------------------------------------------------
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        if not self._threads:
+        if not self._threads and not self._stop.is_set():
             self.start()
         while True:
             try:
                 b = self._q.get_nowait()
             except queue.Empty:
                 self.consumer_stalls += 1
-                b = self._q.get()
+                b = None
+                # never block forever: stop() may fire after the queue
+                # drained, so poll with a timeout and re-check the flag
+                while b is None:
+                    if self._stop.is_set() and self._q.empty():
+                        return
+                    try:
+                        b = self._q.get(timeout=0.05)
+                    except queue.Empty:
+                        continue
+            if b is _SENTINEL:
+                return
             self.batches_out += 1
             yield b
 

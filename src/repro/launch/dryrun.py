@@ -7,6 +7,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (arch × input-shape) on the
 production meshes, print memory/cost analysis, and record roofline terms.
 
+Train shapes lower the SAME step the trainer executes: ``lower_train``
+builds it through ``train.runner.StepRunner`` (explicit state/batch
+shardings, donated state buffers), so these records describe the real
+execution path, not a parallel reimplementation.
+
 Usage:
   python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]

@@ -22,10 +22,8 @@ from repro.distributed import sharding as shd
 from repro.models.model import Model, build_model
 from repro.models.transformer import cache_shapes
 from repro.train.optimizer import AdamWConfig
-from repro.train.train_step import (abstract_state, batch_shardings,
-                                    make_decode_step, make_prefill_step,
-                                    make_train_step, param_shardings,
-                                    state_shardings)
+from repro.train.train_step import (batch_shardings, make_decode_step,
+                                    make_prefill_step, param_shardings)
 
 # archs that skip long_500k (full attention, no windowed variant) — DESIGN.md
 LONG_OK = {"mamba2-130m", "zamba2-2.7b", "gemma2-27b", "gemma3-4b"}
@@ -108,37 +106,20 @@ def _pallas_costs(run, mesh, shape, *, causal: bool):
 def lower_train(arch: str, shape: ShapeConfig, mesh, *,
                 sharding: Optional[str] = None, seq_parallel=None,
                 **overrides) -> LoweredCase:
+    """Lowers the SAME execution path the trainer runs: the train step is
+    built by ``train.runner.StepRunner`` (explicit in/out shardings from
+    ``state_shardings``/``batch_shardings``, donated state buffers), so
+    dry-run roofline numbers describe exactly what ``TrainLoop`` executes.
+    """
+    from repro.train.runner import StepRunner
+
     run = make_run(arch, shape, sharding=sharding, mode_kind="train",
                    **overrides)
     model = build_model(run.model)
-    opt = AdamWConfig()
     sp = _seq_axis(run, mesh) if seq_parallel is None else (
         "model" if seq_parallel else None)
-    constrain = shd.activation_sharding(mesh, shape.global_batch,
-                                        run.sharding, seq_axis=sp)
-
-    from repro.train.train_step import loss_for, _moe_ctx
-    from repro.core.accum import accumulate_grads
-    from repro.train.optimizer import adamw_update
-
-    def step(state, batch):
-        def loss_fn(p, b):
-            return loss_for(model, p, b, run=run, mesh=mesh,
-                            constrain=constrain)
-        loss, grads, metrics = accumulate_grads(
-            loss_fn, state["params"], batch, run.microbatch or 1)
-        new_params, new_opt, om = adamw_update(
-            opt, grads, state["opt"], state["params"])
-        return {"params": new_params, "opt": new_opt}, {**metrics, **om}
-
-    st_sh = state_shardings(model, mesh, run)
-    b_sh = batch_shardings(model, mesh, run, shape)
-    st_abs = abstract_state(model, run)
-    inputs = model.input_specs(shape, act_dtype=jnp.dtype(run.activation_dtype))
-    lowered = jax.jit(
-        step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
-        donate_argnums=(0,),
-    ).lower(st_abs, inputs)
+    runner = StepRunner(model, run, AdamWConfig(), mesh, seq_axis=sp)
+    lowered = runner.lower()
     mf = model_flops(run.model, shape.global_batch * shape.seq_len)
     pc = _pallas_costs(run, mesh, shape,
                        causal=run.model.family != "encoder")

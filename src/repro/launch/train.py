@@ -34,6 +34,8 @@ def main():
     ap.add_argument("--n-functions", type=int, default=3000)
     ap.add_argument("--data-dir", default=None)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="background-save every N steps (0 = final only)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -43,9 +45,10 @@ def main():
     from repro.data import (ByteBPETokenizer, NetworkFS, PrefetchLoader,
                             StagedDataset, pack_corpus, read_raw_corpus,
                             size_reduction, tune_workers, write_raw_corpus)
+    from repro.launch.mesh import make_host_mesh
     from repro.models import build_model
     from repro.train.optimizer import AdamWConfig
-    from repro.train.trainer import train
+    from repro.train.runner import StepRunner, TrainLoop
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -99,14 +102,28 @@ def main():
                     activation_dtype="float32")
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
                       total_steps=args.steps)
+
+    # data-parallel host mesh over whatever devices exist: the runner jits
+    # ONCE with explicit state/batch shardings + donated state buffers
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(data=n_dev if args.batch % n_dev == 0 else 1)
+    runner = StepRunner(model, run, opt, mesh)
+    loop = TrainLoop(runner, log_every=args.log_every, ckpt_path=args.ckpt,
+                     ckpt_every=args.ckpt_every if args.ckpt else 0)
     print(f"[train] {cfg.name}: {model.cfg.n_layers}L d={cfg.d_model} "
-          f"on {len(jax.devices())} device(s)")
-    state, log = train(model, run, opt, loader, steps=args.steps,
-                       log_every=args.log_every, ckpt_path=args.ckpt)
+          f"on {n_dev} device(s), mesh {dict(mesh.shape)}")
+    state, log = loop.run(loader, args.steps)
     loader.stop()
-    for s, m, sps in zip(log.steps, log.metrics, log.samples_per_s):
+    for s, m, sps, tps, mfu in zip(log.steps, log.metrics, log.samples_per_s,
+                                   log.tokens_per_s, log.mfu):
         print(f"  step {s:5d} loss={m['loss']:.4f} xent={m['xent']:.4f} "
-              f"acc={m.get('acc', float('nan')):.3f} samples/s={sps:.1f}")
+              f"acc={m.get('acc', float('nan')):.3f} samples/s={sps:.1f} "
+              f"tokens/s={tps:.0f} mfu={mfu:.2e}")
+    t = log.telemetry
+    print(f"[telemetry] step_ema={t['step_time_ema']*1e3:.1f}ms "
+          f"tokens/s={t['tokens_per_s']:.0f} "
+          f"host_stall={t['stall_fraction']*100:.1f}% "
+          f"compiles={t['n_traces']:.0f}")
     print("[done]")
 
 

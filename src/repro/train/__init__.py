@@ -2,4 +2,6 @@ from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state  # n
 from repro.train.train_step import (abstract_state, init_state,  # noqa: F401
                                     make_decode_step, make_prefill_step,
                                     make_train_step, state_shardings)
+from repro.train.runner import (AsyncMetrics, StepRunner,  # noqa: F401
+                                TrainerLog, TrainLoop)
 from repro.train.trainer import train  # noqa: F401

@@ -8,8 +8,10 @@ from __future__ import annotations
 
 import json
 import os
+import queue
 import re
-from typing import Any, Dict
+import threading
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
@@ -36,6 +38,73 @@ def save(path: str, tree, step: int | None = None) -> str:
     with open(re.sub(r"\.npz$", "", path) + ".meta.json", "w") as f:
         json.dump(meta, f)
     return path
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer.
+
+    ``save()`` splits the work the way async checkpointing does in
+    production (orbax-style): the device->host snapshot happens on the
+    caller's thread — it must, because with buffer donation the state
+    arrays are reused in place by the very next dispatched step — while
+    serialization and disk I/O (the expensive part) run on a daemon
+    worker, so the train loop keeps the accelerator dispatch queue full.
+
+    Use as a context manager, or call :meth:`close` to flush.  Worker
+    exceptions are re-raised on the next ``save``/``wait``/``close``.
+    """
+
+    def __init__(self, path: str, max_pending: int = 2):
+        self.path = path
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._err: Optional[BaseException] = None
+        self.n_saved = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def _loop(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                host_tree, step = item
+                save(self.path, host_tree, step=step)
+                self.n_saved += 1
+            except BaseException as e:  # noqa: BLE001 — surface on caller
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _check(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def save(self, tree, step: Optional[int] = None):
+        """Snapshot ``tree`` to host memory and enqueue the write."""
+        self._check()
+        host = jax.tree_util.tree_map(np.asarray, tree)
+        self._q.put((host, step))
+
+    def wait(self):
+        """Block until every enqueued checkpoint is on disk."""
+        self._q.join()
+        self._check()
+
+    def close(self):
+        if self._thread.is_alive():
+            self._q.join()
+            self._q.put(None)
+            self._thread.join(timeout=10.0)
+        self._check()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 def restore(path: str, like):

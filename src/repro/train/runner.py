@@ -1,0 +1,393 @@
+"""Sharding-aware asynchronous training execution: StepRunner + TrainLoop.
+
+The paper's recommendations are about keeping the accelerator busy; this
+module applies them to the execution path itself:
+
+  StepRunner  — compiles the train step ONCE with explicit
+                ``in_shardings``/``out_shardings`` derived from
+                ``state_shardings``/``batch_shardings`` and donates the
+                state argument, so params + optimizer buffers are reused
+                in place (no per-step state copy, no recompiles).
+  TrainLoop   — drives the runner without ever blocking the dispatch
+                queue: device batches arrive through the double-buffered
+                ``data.device_prefetch`` adapter, metric scalars are
+                fetched asynchronously (resolved only once the device has
+                produced them), and checkpoint serialization runs on a
+                background thread (``checkpoint.AsyncCheckpointer``).
+
+Per-step telemetry (step-time EMA, tokens/s, an MFU estimate from the
+``analysis.hlocost`` trip-count-aware HLO cost model, and the host-stall
+fraction) rides along in the returned :class:`TrainerLog`.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.data.device_prefetch import DevicePrefetch
+from repro.models.model import Model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import (batch_shardings, init_state,
+                                    make_train_step, state_shardings)
+
+# TPU v5e peak (matches analysis.roofline defaults); override per hardware
+DEFAULT_PEAK_FLOPS = 197e12
+
+
+# ---------------------------------------------------------------------------
+# Non-blocking metrics
+# ---------------------------------------------------------------------------
+
+
+class AsyncMetrics:
+    """Holds device metric trees and resolves them to host floats lazily.
+
+    ``push`` never blocks.  ``poll`` resolves only entries whose arrays
+    the device has already produced (``Array.is_ready``), so the host
+    keeps dispatching ahead of the accelerator; a bounded pending window
+    (``max_pending``) forces resolution of the oldest entry rather than
+    letting unbounded device memory accumulate.  ``drain`` resolves
+    everything (end of training).
+    """
+
+    def __init__(self, max_pending: int = 8):
+        self.max_pending = max_pending
+        self._pending: "collections.deque" = collections.deque()
+        self.forced_resolves = 0
+
+    @staticmethod
+    def _is_ready(metrics: Dict[str, Any]) -> bool:
+        for v in metrics.values():
+            ready = getattr(v, "is_ready", None)
+            if ready is not None and not ready():
+                return False
+        return True
+
+    @staticmethod
+    def _resolve(entry):
+        meta, metrics = entry
+        return meta, {k: float(v) for k, v in metrics.items()}
+
+    def push(self, meta: Dict[str, Any], metrics: Dict[str, Any]):
+        self._pending.append((meta, metrics))
+
+    def poll(self) -> List[tuple]:
+        out = []
+        while self._pending and self._is_ready(self._pending[0][1]):
+            out.append(self._resolve(self._pending.popleft()))
+        while len(self._pending) > self.max_pending:
+            self.forced_resolves += 1
+            out.append(self._resolve(self._pending.popleft()))
+        return out
+
+    def drain(self) -> List[tuple]:
+        out = []
+        while self._pending:
+            out.append(self._resolve(self._pending.popleft()))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# StepRunner
+# ---------------------------------------------------------------------------
+
+
+class StepRunner:
+    """Owns the jitted train step: explicit shardings, donation, AOT
+    compilation, and the compiled-program cost model.
+
+    With a ``mesh`` the step is jitted with ``in_shardings`` /
+    ``out_shardings`` built from ``state_shardings``/``batch_shardings``
+    (the trees the seed repo built but never passed to jit) and
+    ``donate_argnums=(0,)`` on the state.  ``n_traces`` counts retraces —
+    a steady-state loop must keep it at 1.
+    """
+
+    def __init__(self, model: Model, run: RunConfig, opt: AdamWConfig,
+                 mesh=None, *, donate: bool = True,
+                 seq_axis: Optional[str] = None):
+        self.model, self.run, self.opt, self.mesh = model, run, opt, mesh
+        self.donate = donate
+        self.n_traces = 0
+        step = make_train_step(model, run, opt, mesh, seq_axis=seq_axis)
+
+        def counted(state, batch):
+            self.n_traces += 1  # trace-time side effect == compile count
+            return step(state, batch)
+
+        self._counted = counted
+        self.state_shardings = None
+        self.batch_shardings: Dict[str, Any] = {}
+        if mesh is not None:
+            self.state_shardings = state_shardings(model, mesh, run)
+            self.batch_shardings = batch_shardings(model, mesh, run,
+                                                   run.shape)
+        self._jit = None        # built on first use: the batch half of
+        self.compiled = None    # in_shardings must mirror the actual
+        self._cost = None       # batch pytree structure
+
+    def _get_jit(self, batch):
+        if self._jit is None:
+            kw: Dict[str, Any] = {}
+            if self.donate:
+                kw["donate_argnums"] = (0,)
+            if self.mesh is not None:
+                b_sh = {k: self.batch_shardings.get(k) for k in batch} \
+                    if isinstance(batch, dict) else None
+                kw["in_shardings"] = (self.state_shardings, b_sh)
+                kw["out_shardings"] = (self.state_shardings, None)
+            self._jit = jax.jit(self._counted, **kw)
+        return self._jit
+
+    # -- state -----------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        state = init_state(self.model, jax.random.PRNGKey(seed), self.run)
+        return self.place_state(state)
+
+    def place_state(self, state):
+        """Commit the state onto its sharded layout (so the donated-buffer
+        fast path applies from the very first step)."""
+        if self.state_shardings is None:
+            return state
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), state, self.state_shardings)
+
+    # -- compilation -----------------------------------------------------
+    def lower(self, state=None, batch=None):
+        """Lower the step with explicit shardings.  With no arguments it
+        lowers against the run's abstract state / input specs — the path
+        ``launch/dryrun.py`` (via ``lowering.lower_train``) analyzes."""
+        from repro.train.train_step import abstract_state
+
+        if batch is None:
+            batch = self.model.input_specs(
+                self.run.shape,
+                act_dtype=jnp.dtype(self.run.activation_dtype))
+        if state is None:
+            state = abstract_state(self.model, self.run)
+        return self._get_jit(batch).lower(state, batch)
+
+    def compile(self, state, batch) -> "StepRunner":
+        """AOT lower+compile against the concrete (state, batch) shapes.
+        Subsequent calls run the stored executable — compilation happens
+        exactly once, by construction, and the optimized HLO feeds the
+        hlocost MFU estimate."""
+        def one(x):
+            sharding = getattr(x, "sharding", None)
+            kw = {"sharding": sharding} if sharding is not None else {}
+            return jax.ShapeDtypeStruct(jnp.shape(x),
+                                        getattr(x, "dtype", jnp.float32),
+                                        **kw)
+
+        spec = lambda t: jax.tree_util.tree_map(one, t)
+        self.compiled = self.lower(spec(state), spec(batch)).compile()
+        return self
+
+    def __call__(self, state, batch):
+        if self.compiled is not None:
+            return self.compiled(state, batch)
+        return self._get_jit(batch)(state, batch)
+
+    # -- cost / MFU ------------------------------------------------------
+    def step_cost(self):
+        """Per-device hlocost Cost of the compiled step (trip-count-aware
+        flops/bytes), or None before :meth:`compile`."""
+        if self._cost is None and self.compiled is not None:
+            from repro.analysis.hlocost import analyze_text
+
+            self._cost = analyze_text(self.compiled.as_text())
+        return self._cost
+
+    def flops_per_step(self, tokens_per_step: int) -> float:
+        """Per-device flops of one step: the compiled program's cost when
+        available, else the analytic 6ND model."""
+        cost = self.step_cost()
+        if cost is not None and cost.flops > 0:
+            return cost.flops
+        from repro.core.scaling import model_flops
+
+        n_dev = self.mesh.size if self.mesh is not None else 1
+        return model_flops(self.model.cfg, tokens_per_step) / n_dev
+
+    def mfu(self, step_time_s: float, tokens_per_step: int,
+            peak_flops: float = DEFAULT_PEAK_FLOPS) -> float:
+        if step_time_s <= 0:
+            return float("nan")
+        return self.flops_per_step(tokens_per_step) / (
+            step_time_s * peak_flops)
+
+
+# ---------------------------------------------------------------------------
+# TrainLoop
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainerLog:
+    steps: List[int] = field(default_factory=list)
+    metrics: List[Dict[str, float]] = field(default_factory=list)
+    samples_per_s: List[float] = field(default_factory=list)
+    tokens_per_s: List[float] = field(default_factory=list)
+    step_time_ema: List[float] = field(default_factory=list)
+    mfu: List[float] = field(default_factory=list)
+    telemetry: Dict[str, float] = field(default_factory=dict)
+
+    def last(self) -> Dict[str, float]:
+        return self.metrics[-1] if self.metrics else {}
+
+
+class TrainLoop:
+    """Asynchronous driver around a :class:`StepRunner`.
+
+    The loop's only synchronous points are (a) the host->device snapshot
+    before an async checkpoint (required: the next dispatched step reuses
+    the donated state buffers in place) and (b) the final drain.  Host
+    time spent blocked is accounted in ``telemetry['host_blocked_s']`` /
+    ``['stall_fraction']`` — the figure of merit the ``train_overlap``
+    benchmark compares against the seed-style loop.
+    """
+
+    def __init__(self, runner: StepRunner, *, log_every: int = 10,
+                 ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+                 async_checkpoint: bool = True, device_prefetch: bool = True,
+                 prefetch_size: int = 2, aot_compile: bool = True,
+                 metrics_lag: int = 8,
+                 peak_flops: float = DEFAULT_PEAK_FLOPS):
+        self.runner = runner
+        self.log_every = max(1, log_every)
+        self.ckpt_path, self.ckpt_every = ckpt_path, ckpt_every
+        self.async_checkpoint = async_checkpoint
+        self.device_prefetch = device_prefetch
+        self.prefetch_size = prefetch_size
+        self.aot_compile = aot_compile
+        self.metrics_lag = metrics_lag
+        self.peak_flops = peak_flops
+
+    def run(self, data: Iterable[Dict[str, Any]], steps: int, *,
+            state=None, seed: int = 0):
+        """Returns (state, TrainerLog)."""
+        runner = self.runner
+        if state is None:
+            state = runner.init_state(seed)
+        else:
+            state = runner.place_state(state)
+
+        if self.device_prefetch:
+            it = iter(DevicePrefetch(data, shardings=runner.batch_shardings,
+                                     size=self.prefetch_size))
+        else:
+            it = iter(data)
+
+        log = TrainerLog()
+        async_metrics = AsyncMetrics(max_pending=self.metrics_lag)
+        saver = None
+        if self.ckpt_path and self.async_checkpoint:
+            saver = ckpt.AsyncCheckpointer(self.ckpt_path)
+
+        blocked = 0.0          # host time spent waiting (stalls)
+        ema = None
+        tokens_per_step = None
+        t_start = time.perf_counter()
+        t_last_log = t_start
+        last_logged = -1
+
+        def resolve_into_log(entries):
+            for meta, m in entries:
+                log.steps.append(meta["step"])
+                log.metrics.append(m)
+                log.samples_per_s.append(meta["samples_per_s"])
+                log.tokens_per_s.append(meta["tokens_per_s"])
+                log.step_time_ema.append(meta["step_time_ema"])
+                log.mfu.append(meta["mfu"])
+
+        last_saved = -1
+
+        try:
+            t_iter = time.perf_counter()
+            for i in range(steps):
+                tw = time.perf_counter()
+                batch = next(it)
+                blocked += time.perf_counter() - tw
+
+                if i == 0:
+                    if tokens_per_step is None:
+                        tok = batch["tokens"]
+                        tokens_per_step = int(tok.shape[0] * tok.shape[1])
+                    if self.aot_compile and runner.compiled is None:
+                        runner.compile(state, batch)
+
+                state, metrics = runner(state, batch)
+
+                now = time.perf_counter()
+                dt = now - t_iter
+                t_iter = now
+                if i > 0:  # first iteration is dominated by compilation
+                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+
+                if (i + 1) % self.log_every == 0 or i == 0 \
+                        or i == steps - 1:
+                    n = i - last_logged
+                    window = max(now - t_last_log, 1e-9)
+                    bsz = batch["tokens"].shape[0]
+                    step_t = ema if ema is not None else dt
+                    meta = {
+                        "step": i + 1,
+                        "samples_per_s": n * bsz / window,
+                        "tokens_per_s": n * tokens_per_step / window,
+                        "step_time_ema": step_t,
+                        "mfu": runner.mfu(step_t, tokens_per_step,
+                                          self.peak_flops),
+                    }
+                    async_metrics.push(meta, metrics)
+                    last_logged = i
+                    t_last_log = now
+                    # poll may force-resolve past the lag window, which
+                    # blocks on the device — account it as stall time
+                    tw = time.perf_counter()
+                    resolve_into_log(async_metrics.poll())
+                    blocked += time.perf_counter() - tw
+
+                if self.ckpt_path and self.ckpt_every \
+                        and (i + 1) % self.ckpt_every == 0:
+                    tw = time.perf_counter()
+                    if saver is not None:
+                        saver.save(state, step=i + 1)
+                    else:
+                        ckpt.save(self.ckpt_path, state, step=i + 1)
+                    blocked += time.perf_counter() - tw
+                    last_saved = i + 1
+
+            tw = time.perf_counter()
+            resolve_into_log(async_metrics.drain())
+            jax.block_until_ready(state)
+            if self.ckpt_path and last_saved != steps:
+                if saver is not None:
+                    saver.save(state, step=steps)
+                else:
+                    ckpt.save(self.ckpt_path, state, step=steps)
+            if saver is not None:
+                saver.close()
+                saver = None
+            blocked += time.perf_counter() - tw
+        finally:
+            if saver is not None:  # exception path: still flush the queue
+                saver.close()
+
+        total = time.perf_counter() - t_start
+        log.telemetry = {
+            "total_s": total,
+            "host_blocked_s": blocked,
+            "stall_fraction": blocked / max(total, 1e-9),
+            "step_time_ema": ema if ema is not None else float("nan"),
+            "tokens_per_s": steps * (tokens_per_step or 0) / max(total, 1e-9),
+            "n_traces": runner.n_traces,
+            "forced_metric_resolves": async_metrics.forced_resolves,
+        }
+        return state, log

@@ -159,12 +159,16 @@ def loss_for(model: Model, params, batch, *, run: RunConfig,
 
 
 def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
-                    mesh: Optional[Mesh] = None) -> Callable:
-    """(state, batch) -> (state, metrics); state = {params, opt}."""
+                    mesh: Optional[Mesh] = None,
+                    seq_axis: Optional[str] = None) -> Callable:
+    """(state, batch) -> (state, metrics); state = {params, opt}.
+
+    ``seq_axis='model'`` adds Megatron-style sequence parallelism to the
+    inter-block activation constraint (fsdp_tp training)."""
     constrain = None
     if mesh is not None:
         constrain = shd.activation_sharding(
-            mesh, run.shape.global_batch, run.sharding)
+            mesh, run.shape.global_batch, run.sharding, seq_axis=seq_axis)
 
     def step(state, batch):
         def loss_fn(p, b):

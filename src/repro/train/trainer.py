@@ -1,59 +1,45 @@
-"""Training loop: wires the data loader, jit'd train step, metrics and
-checkpointing together.  This is the driver ``examples/`` and
-``launch/train.py`` use."""
+"""Training loop facade: wires the data loader, the sharding-aware
+StepRunner and the async TrainLoop together.  This is the driver
+``examples/`` and ``launch/train.py`` use.
+
+The execution machinery lives in ``repro.train.runner``: the step is
+compiled once with explicit shardings and donated state buffers, batches
+are device-prefetched, metrics are fetched asynchronously and checkpoints
+are written on a background thread.  ``train()`` keeps the seed repo's
+call signature so existing callers and tests keep working.
+"""
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional
-
-import jax
-import jax.numpy as jnp
+from typing import Any, Dict, Iterable, Optional
 
 from repro.configs.base import RunConfig
 from repro.models.model import Model
-from repro.train import checkpoint as ckpt
 from repro.train.optimizer import AdamWConfig
-from repro.train.train_step import init_state, make_train_step
-
-
-@dataclass
-class TrainerLog:
-    steps: List[int] = field(default_factory=list)
-    metrics: List[Dict[str, float]] = field(default_factory=list)
-    samples_per_s: List[float] = field(default_factory=list)
-
-    def last(self) -> Dict[str, float]:
-        return self.metrics[-1] if self.metrics else {}
+from repro.train.runner import StepRunner, TrainerLog, TrainLoop  # noqa: F401
 
 
 def train(model: Model, run: RunConfig, opt: AdamWConfig,
           data: Iterable[Dict[str, Any]], *, steps: int,
           seed: int = 0, mesh=None, log_every: int = 10,
           ckpt_path: Optional[str] = None, ckpt_every: int = 0,
-          state=None) -> tuple:
+          state=None, runner: Optional[StepRunner] = None,
+          device_prefetch: bool = True, async_checkpoint: bool = True,
+          aot_compile: bool = True, donate: bool = True,
+          peak_flops: Optional[float] = None) -> tuple:
     """Returns (state, TrainerLog)."""
-    step_fn = jax.jit(make_train_step(model, run, opt, mesh))
-    if state is None:
-        state = init_state(model, jax.random.PRNGKey(seed), run)
-    log = TrainerLog()
-    it = iter(data)
-    t_last = time.perf_counter()
-    for i in range(steps):
-        batch = next(it)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        state, metrics = step_fn(state, batch)
-        if (i + 1) % log_every == 0 or i == 0 or i == steps - 1:
-            metrics = {k: float(v) for k, v in metrics.items()}
-            now = time.perf_counter()
-            n = 1 if i == 0 else log_every
-            sps = n * batch["tokens"].shape[0] / (now - t_last)
-            t_last = now
-            log.steps.append(i + 1)
-            log.metrics.append(metrics)
-            log.samples_per_s.append(sps)
-        if ckpt_path and ckpt_every and (i + 1) % ckpt_every == 0:
-            ckpt.save(ckpt_path, state, step=i + 1)
-    if ckpt_path:
-        ckpt.save(ckpt_path, state, step=steps)
-    return state, log
+    if runner is None:
+        runner = StepRunner(model, run, opt, mesh, donate=donate)
+    if state is not None and runner.donate:
+        # seed-trainer compat: donation consumes the state buffers in
+        # place, but a caller-provided tree must stay usable after we
+        # return — train on a copy, not on the caller's arrays
+        import jax
+        import jax.numpy as jnp
+
+        state = jax.tree_util.tree_map(jnp.array, state)
+    kw = {} if peak_flops is None else {"peak_flops": peak_flops}
+    loop = TrainLoop(runner, log_every=log_every, ckpt_path=ckpt_path,
+                     ckpt_every=ckpt_every, async_checkpoint=async_checkpoint,
+                     device_prefetch=device_prefetch, aot_compile=aot_compile,
+                     **kw)
+    return loop.run(data, steps, state=state, seed=seed)
