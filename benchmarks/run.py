@@ -10,12 +10,15 @@ CSV rows (derived = the claim-relevant figure of merit).
   mlm_train_step         measured train-step time of the paper's model (CPU)
   train_overlap          dispatch-stall fraction: seed-style blocking loop
                          vs the sharding-aware async StepRunner/TrainLoop
+  data_pipeline          deterministic pipeline vs seed loader throughput,
+                         per-host shard disjointness, resume overhead
   kernel_*               Pallas kernels (interpret mode) vs jnp oracle
   roofline_table         aggregated dry-run roofline terms (if present)
 
-Pass bench-name prefixes as argv to run a subset, e.g.:
+Pass bench-name prefixes as argv to run a subset, and ``--json PATH`` to
+also write the rows as a JSON list (CI uploads it as an artifact), e.g.:
 
-  PYTHONPATH=src python benchmarks/run.py train_overlap kernel
+  PYTHONPATH=src python benchmarks/run.py train_overlap kernel --json out.json
 """
 from __future__ import annotations
 
@@ -27,6 +30,13 @@ import tempfile
 import time
 
 ROW = "{name},{us:.1f},{derived}"
+RESULTS: list = []
+
+
+def emit(name: str, us: float, derived: str):
+    print(ROW.format(name=name, us=us, derived=derived))
+    RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": derived})
 
 
 def _t(fn, n=3):
@@ -53,8 +63,8 @@ def bench_r1_dataset_reduction(tmp):
                          seq_len=512)
     us = (time.perf_counter() - t0) * 1e6
     red = size_reduction(nbytes, shards)
-    print(ROW.format(name="r1_dataset_reduction", us=us,
-                     derived=f"reduction={red*100:.1f}%_paper=99%"))
+    emit(name="r1_dataset_reduction", us=us,
+                     derived=f"reduction={red*100:.1f}%_paper=99%")
     return shards
 
 
@@ -70,8 +80,8 @@ def bench_r2_staging(tmp, shards):
     stage_s = local.stage()
     m_loc = measure_throughput(local, 64, 2, n_batches=40)
     speed = m_loc["samples_per_s"] / max(m_net["samples_per_s"], 1e-9)
-    print(ROW.format(name="r2_staging", us=stage_s * 1e6,
-                     derived=f"staged_speedup={speed:.2f}x"))
+    emit(name="r2_staging", us=stage_s * 1e6,
+                     derived=f"staged_speedup={speed:.2f}x")
 
 
 def bench_r3_loader_workers(tmp, shards):
@@ -84,8 +94,8 @@ def bench_r3_loader_workers(tmp, shards):
     us = (time.perf_counter() - t0) * 1e6
     hist = ";".join(f"w{h['n_workers']}:util={h['utilization']:.2f}"
                     for h in out["history"])
-    print(ROW.format(name="r3_loader_workers", us=us,
-                     derived=f"chosen={out['chosen']}_{hist}"))
+    emit(name="r3_loader_workers", us=us,
+                     derived=f"chosen={out['chosen']}_{hist}")
 
 
 def bench_fig1_dp_scaling():
@@ -103,8 +113,8 @@ def bench_fig1_dp_scaling():
                                   seq=512)
         rows.append(f"{arch}-v5e:eff@256={tcurve[256]['efficiency']:.2f}")
     us = (time.perf_counter() - t0) * 1e6
-    print(ROW.format(name="fig1_dp_scaling", us=us,
-                     derived="_".join(rows) + "_paper=near-linear"))
+    emit(name="fig1_dp_scaling", us=us,
+                     derived="_".join(rows) + "_paper=near-linear")
 
 
 def bench_r5_batch_vs_model():
@@ -118,10 +128,10 @@ def bench_r5_batch_vs_model():
         b[arch] = mm.max_batch(512, H100_NVL.hbm_bytes)
     us = (time.perf_counter() - t0) * 1e6
     ratio = b["bert-mlm-120m"] / max(1, b["bert-mlm-350m"])
-    print(ROW.format(
+    emit(
         name="r5_batch_vs_model", us=us,
         derived=(f"b120={b['bert-mlm-120m']}_b350={b['bert-mlm-350m']}"
-                 f"_ratio={ratio:.1f}_paper=184/20=9.2")))
+                 f"_ratio={ratio:.1f}_paper=184/20=9.2"))
 
 
 def bench_mlm_train_step():
@@ -155,8 +165,8 @@ def bench_mlm_train_step():
 
     us = _t(one, n=3)
     tok_s = B * S / (us / 1e6)
-    print(ROW.format(name="mlm_train_step", us=us,
-                     derived=f"tokens_per_s={tok_s:.0f}_cpu_host"))
+    emit(name="mlm_train_step", us=us,
+                     derived=f"tokens_per_s={tok_s:.0f}_cpu_host")
 
 
 def bench_train_overlap(tmp):
@@ -246,14 +256,93 @@ def bench_train_overlap(tmp):
     _, log = loop.run(batches(), STEPS)
     t = log.telemetry
     us = (time.perf_counter() - t0) * 1e6
-    print(ROW.format(
+    emit(
         name="train_overlap", us=us,
         derived=(f"stall_seed={seed_stall:.3f}_stall_runner="
                  f"{t['stall_fraction']:.3f}_compiles={t['n_traces']:.0f}"
-                 f"_tokens_per_s={t['tokens_per_s']:.0f}")))
+                 f"_tokens_per_s={t['tokens_per_s']:.0f}"))
     assert t["stall_fraction"] < seed_stall, (
         "async runner must stall less than the seed-style loop",
         t["stall_fraction"], seed_stall)
+
+
+def bench_data_pipeline(tmp):
+    """Deterministic pipeline vs the seed sampling loader.
+
+    Rows:
+      data_pipeline_throughput   ordered per-host loader samples/s vs the
+                                 nondeterministic seed PrefetchLoader
+      data_pipeline_sharding     2-host disjointness/coverage check + the
+                                 per-host throughput when this host reads
+                                 only its half of every global batch
+      data_pipeline_resume       overhead of restore()+first-batch vs a
+                                 cold first batch (resume cost is an
+                                 integer seek, not a re-read)
+    """
+    import numpy as np
+
+    from repro.data import (DataPipeline, PrefetchLoader, StagedDataset,
+                            measure_throughput)
+
+    B, N_BATCH = 64, 120
+    pipe = DataPipeline.build(os.path.join(tmp, "dp"), n_functions=1500,
+                              seq_len=512, batch_size=B, vocab_size=1024,
+                              n_workers=2, seed=0)
+    ds = pipe.ds
+
+    # seed loader (nondeterministic shard sampler), same staged data
+    m_seed = measure_throughput(StagedDataset(list(ds.shards)), B, 2,
+                                n_batches=N_BATCH)
+
+    def pipe_throughput(p):
+        it = p.host_batches()
+        next(it)  # warm workers
+        t0 = time.perf_counter()
+        for _ in range(N_BATCH):
+            next(it)
+        dt = time.perf_counter() - t0
+        p.close()
+        return N_BATCH * p.batch_size / dt
+
+    t0 = time.perf_counter()
+    sps = pipe_throughput(pipe)
+    us = (time.perf_counter() - t0) * 1e6
+    emit(name="data_pipeline_throughput", us=us,
+         derived=(f"ordered={sps:.0f}sps_seed="
+                  f"{m_seed['samples_per_s']:.0f}sps_ratio="
+                  f"{sps / max(m_seed['samples_per_s'], 1e-9):.2f}x"))
+
+    # 2-host sharding: disjoint covering halves of the global order
+    host0 = DataPipeline(ds, B // 2, seed=0, process_index=0,
+                         process_count=2, n_workers=2)
+    host1 = DataPipeline(ds, B // 2, seed=0, process_index=1,
+                         process_count=2, n_workers=2)
+    for b in range(3):
+        i0, i1 = host0.batch_indices(b), host1.batch_indices(b)
+        assert set(i0).isdisjoint(i1) and len(set(i0) | set(i1)) == B
+    t0 = time.perf_counter()
+    sps0 = pipe_throughput(host0)
+    us = (time.perf_counter() - t0) * 1e6
+    host1.close()
+    emit(name="data_pipeline_sharding", us=us,
+         derived=f"disjoint=ok_perhost={sps0:.0f}sps_hosts=2")
+
+    # resume overhead: aim a fresh pipeline mid-epoch and time to batch 1
+    cold = DataPipeline(ds, B, seed=0, n_workers=2)
+    t0 = time.perf_counter()
+    next(cold.host_batches())
+    cold_s = time.perf_counter() - t0
+    cold.close()
+    warm = DataPipeline(ds, B, seed=0, n_workers=2)
+    warm.restore(warm.state_at(pipe.batches_per_epoch // 2))
+    t0 = time.perf_counter()
+    next(warm.host_batches())
+    resume_s = time.perf_counter() - t0
+    warm.close()
+    emit(name="data_pipeline_resume", us=resume_s * 1e6,
+         derived=(f"first_batch_cold={cold_s*1e3:.1f}ms_resumed="
+                  f"{resume_s*1e3:.1f}ms_overhead="
+                  f"{(resume_s - cold_s)*1e3:+.1f}ms"))
 
 
 def bench_kernels():
@@ -273,8 +362,8 @@ def bench_kernels():
         flash_attention_fwd(q, k, v, causal=True)))
     err = float(jnp.abs(flash_attention_fwd(q, k, v, causal=True)
                         - ref.flash_attention_ref(q, k, v, causal=True)).max())
-    print(ROW.format(name="kernel_flash_attention_interp", us=us,
-                     derived=f"maxerr={err:.1e}"))
+    emit(name="kernel_flash_attention_interp", us=us,
+                     derived=f"maxerr={err:.1e}")
 
     x = jax.random.normal(ks[3], (1, 256, 4, 16))
     dt = jax.nn.softplus(jax.random.normal(ks[4], (1, 256, 4)))
@@ -285,16 +374,16 @@ def bench_kernels():
         ssd_scan(x, dt, A, Bm, Cm, chunk=64)[0]))
     e = float(jnp.abs(ssd_scan(x, dt, A, Bm, Cm, chunk=64)[0]
                       - ref.ssd_ref(x, dt, A, Bm, Cm, chunk=64)[0]).max())
-    print(ROW.format(name="kernel_ssd_scan_interp", us=us,
-                     derived=f"maxerr={e:.1e}"))
+    emit(name="kernel_ssd_scan_interp", us=us,
+                     derived=f"maxerr={e:.1e}")
 
     logits = jax.random.normal(ks[0], (512, 4096))
     labels = jax.random.randint(ks[1], (512,), 0, 4096)
     us = _t(lambda: jax.block_until_ready(fused_xent(logits, labels)))
     e = float(jnp.abs(fused_xent(logits, labels)
                       - ref.xent_ref(logits, labels)).max())
-    print(ROW.format(name="kernel_fused_xent_interp", us=us,
-                     derived=f"maxerr={e:.1e}"))
+    emit(name="kernel_fused_xent_interp", us=us,
+                     derived=f"maxerr={e:.1e}")
 
 
 def bench_roofline_table():
@@ -305,21 +394,29 @@ def bench_roofline_table():
         if "t_compute" in r:
             recs.append(r)
     if not recs:
-        print(ROW.format(name="roofline_table", us=0,
-                         derived="no_dryrun_records_yet"))
+        emit(name="roofline_table", us=0,
+                         derived="no_dryrun_records_yet")
         return
     n_mem = sum(1 for r in recs if r["dominant"] == "memory")
     n_cmp = sum(1 for r in recs if r["dominant"] == "compute")
     n_col = sum(1 for r in recs if r["dominant"] == "collective")
     fits = sum(1 for r in recs if r["fits_hbm"])
-    print(ROW.format(
+    emit(
         name="roofline_table", us=0,
         derived=(f"records={len(recs)}_mem={n_mem}_compute={n_cmp}"
-                 f"_coll={n_col}_fits_hbm={fits}/{len(recs)}")))
+                 f"_coll={n_col}_fits_hbm={fits}/{len(recs)}"))
 
 
 def main() -> None:
-    names = [a for a in sys.argv[1:] if not a.startswith("-")]
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("--json needs a path argument")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    names = [a for a in argv if not a.startswith("-")]
 
     def want(bench: str) -> bool:
         return not names or any(bench.startswith(n) for n in names)
@@ -341,10 +438,17 @@ def main() -> None:
     if want("train_overlap"):
         with tempfile.TemporaryDirectory() as tmp:
             bench_train_overlap(tmp)
+    if want("data_pipeline"):
+        with tempfile.TemporaryDirectory() as tmp:
+            bench_data_pipeline(tmp)
     if want("kernel"):
         bench_kernels()
     if want("roofline"):
         bench_roofline_table()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(RESULTS, f, indent=2)
+        print(f"# wrote {len(RESULTS)} rows -> {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,10 @@
 """Quickstart: the paper's pipeline end to end in ~a minute on CPU.
 
-Synthesizes a small binary-function corpus, applies the paper's three data
-recommendations (R1 tokenize+pack offline, R2 stage node-locally, R3 tuned
-prefetch loading), then pretrains a reduced BERT-MLM model and prints the
-loss curve.
+Builds the deterministic ``DataPipeline`` over a small synthetic
+binary-function corpus (R1 tokenize+pack offline, R2 stage node-locally,
+R3 ordered parallel prefetch), pretrains a reduced BERT-MLM model with
+resumable sharded checkpoints, then kills-and-resumes to show the loss
+trajectory continuing bit-exact from the saved step.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -21,33 +22,15 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.mlm import mask_tokens
-from repro.data import (ByteBPETokenizer, NetworkFS, PrefetchLoader,
-                        StagedDataset, pack_corpus, read_raw_corpus,
-                        size_reduction, write_raw_corpus)
+from repro.data import DataPipeline, NetworkFS
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.train.optimizer import AdamWConfig
-from repro.train.runner import StepRunner, TrainLoop
+from repro.train.runner import StepRunner, TrainLoop, resume
 
 SEQ, BATCH, STEPS = 64, 16, 60
 
 with tempfile.TemporaryDirectory() as tmp:
-    # R1 — tokenize + pack offline, keep only ids + masks
-    raw = os.path.join(tmp, "raw.jsonl")
-    nbytes = write_raw_corpus(raw, 800, seed=0)
-    fns = list(read_raw_corpus(raw))
-    tok = ByteBPETokenizer.train(fns[:40], vocab_size=1024, max_merges=120)
-    shards = pack_corpus(iter(fns), tok, os.path.join(tmp, "packed"),
-                         seq_len=SEQ)
-    print(f"R1: raw {nbytes/1e6:.1f}MB -> packed "
-          f"(-{size_reduction(nbytes, shards)*100:.0f}%)")
-
-    # R2 — stage to node-local storage
-    ds = StagedDataset(shards, network=NetworkFS(agg_bw=2e9, readers=8),
-                       local_dir=os.path.join(tmp, "local"))
-    print(f"R2: staged in {ds.stage():.2f}s")
-
-    # R3 — prefetch loader (masking happens in the workers)
     cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
                                       d_model=128),
                               vocab_size=1024, max_position=SEQ)
@@ -59,19 +42,43 @@ with tempfile.TemporaryDirectory() as tmp:
         return {"tokens": np.asarray(inp), "labels": np.asarray(lab),
                 "loss_mask": np.asarray(m) * batch["attn_mask"]}
 
-    loader = PrefetchLoader(ds, BATCH, n_workers=2, work_fn=mlm_work).start()
+    # R1+R2+R3 in one shot: corpus -> pack -> stage -> deterministic
+    # per-host order (this is host 0 of 1; masking runs in the workers
+    # with an rng keyed by the global batch index, so the stream is a
+    # pure function of the cursor)
+    pipeline = DataPipeline.build(
+        os.path.join(tmp, "data"), n_functions=800, seq_len=SEQ,
+        batch_size=BATCH, vocab_size=1024, max_merges=120,
+        network=NetworkFS(agg_bw=2e9, readers=8),
+        n_workers=2, seed=0, work_fn=mlm_work)
+    print(f"R1+R2: packed+staged {pipeline.ds.n_examples} examples, "
+          f"{pipeline.batches_per_epoch} batches/epoch")
 
     # train through the sharding-aware async runner: one compile with
     # explicit shardings + donated state, device-prefetched batches,
-    # non-blocking metrics
+    # non-blocking metrics, background sharded checkpoints
     model = build_model(cfg)
     run = RunConfig(model=cfg, shape=ShapeConfig("q", SEQ, BATCH, "train"),
                     sharding="ddp", param_dtype="float32",
                     activation_dtype="float32")
     opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=STEPS)
     runner = StepRunner(model, run, opt, make_host_mesh())
-    state, log = TrainLoop(runner, log_every=10).run(loader, STEPS)
-    loader.stop()
+    ck = os.path.join(tmp, "ck")
+    half = STEPS // 2
+    loop = TrainLoop(runner, log_every=10, ckpt_dir=ck, ckpt_every=half)
+    state, log = loop.run(pipeline, half)
+    print(f"...'killed' after step {half}; resuming from {ck}")
+
+    # a fresh runner + pipeline, as a restarted process would build them
+    runner2 = StepRunner(model, run, opt, make_host_mesh())
+    state, start = resume(ck, runner2, pipeline=pipeline)
+    loop2 = TrainLoop(runner2, log_every=10, ckpt_dir=ck, ckpt_every=half)
+    state, log2 = loop2.run(pipeline, STEPS, state=state, start_step=start)
+    pipeline.close()
+    log.steps += log2.steps
+    log.metrics += log2.metrics
+    log.tokens_per_s += log2.tokens_per_s
+    log.telemetry = log2.telemetry
     for s, m, tps in zip(log.steps, log.metrics, log.tokens_per_s):
         print(f"step {s:3d}  mlm_xent={m['xent']:.4f}  acc={m['acc']:.3f}"
               f"  tokens/s={tps:.0f}")

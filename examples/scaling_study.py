@@ -48,8 +48,11 @@ for shards in (1, 16, 256):
           f"max batch/device = {mm.max_batch(4096, TPU_V5E.hbm_bytes)}")
 
 print()
-print("== measured: sharding-aware async loop telemetry (CPU smoke) ==")
+print("== measured: async loop telemetry over the deterministic pipeline ==")
+import tempfile
+
 from repro.configs.base import RunConfig, ShapeConfig
+from repro.data import DataPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.train.optimizer import AdamWConfig
@@ -62,19 +65,23 @@ model = build_model(mcfg)
 run = RunConfig(model=mcfg, shape=ShapeConfig("s", S, B, "train"),
                 sharding="ddp", param_dtype="float32",
                 activation_dtype="float32")
-rng = np.random.default_rng(0)
 
 
-def batches():
-    while True:
-        toks = rng.integers(4, mcfg.vocab_size, (B, S)).astype(np.int32)
-        yield {"tokens": toks, "labels": toks,
-               "loss_mask": np.ones((B, S), np.float32)}
+def lm_work(batch, rng):
+    toks = batch["tokens"]
+    return {"tokens": toks, "labels": np.roll(toks, -1, axis=1),
+            "loss_mask": batch["attn_mask"]}
 
 
-runner = StepRunner(model, run, AdamWConfig(total_steps=STEPS),
-                    make_host_mesh())
-_, mlog = TrainLoop(runner, log_every=4).run(batches(), STEPS)
+with tempfile.TemporaryDirectory() as tmp:
+    pipeline = DataPipeline.build(tmp, n_functions=300, seq_len=S,
+                                  batch_size=B, vocab_size=mcfg.vocab_size,
+                                  max_merges=60, n_workers=2, seed=0,
+                                  work_fn=lm_work)
+    runner = StepRunner(model, run, AdamWConfig(total_steps=STEPS),
+                        make_host_mesh())
+    _, mlog = TrainLoop(runner, log_every=4).run(pipeline, STEPS)
+    pipeline.close()
 t = mlog.telemetry
 print(f"bert-mlm-120m(reduced) b={B} seq={S}: "
       f"step_ema={t['step_time_ema']*1e3:.1f}ms "

@@ -3,8 +3,10 @@ from repro.data.device_prefetch import (DevicePrefetch,  # noqa: F401
                                         prefetch_to_device)
 from repro.data.corpus import (read_raw_corpus, synth_function,  # noqa: F401
                                write_raw_corpus)
-from repro.data.loader import (PrefetchLoader, measure_throughput,  # noqa: F401
+from repro.data.loader import (OrderedPrefetchLoader,  # noqa: F401
+                               PrefetchLoader, measure_throughput,
                                tune_workers)
+from repro.data.pipeline import DataPipeline, PipelineState  # noqa: F401
 from repro.data.pack import PackedShard, pack_corpus, size_reduction  # noqa: F401
 from repro.data.tokenizer import (CLS, MASK, PAD, SEP,  # noqa: F401
                                   ByteBPETokenizer)

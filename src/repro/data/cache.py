@@ -59,6 +59,9 @@ class StagedDataset:
         self.shards = new
         self.network = None
         self.staged = True
+        for cached in ("_mmaps", "_shard_sizes", "_shard_offsets"):
+            if hasattr(self, cached):   # shard paths changed: drop caches
+                delattr(self, cached)
         self.stage_seconds = (time.perf_counter() - t0) + sim
         return self.stage_seconds
 
@@ -71,7 +74,58 @@ class StagedDataset:
         toks, mask = s.load()
         return np.asarray(toks), np.asarray(mask)
 
+    # -- flat global index ------------------------------------------------
+    # The deterministic pipeline addresses examples by a single global
+    # index; rows stay mmapped, so a gather touches only the rows it needs.
+
+    def _mmap(self, i: int):
+        """Long-lived read-only mmap of shard ``i`` (reopening the .npy
+        per batch dominated gather cost; concurrent reads are safe)."""
+        if not hasattr(self, "_mmaps"):
+            self._mmaps: dict = {}
+        m = self._mmaps.get(i)
+        if m is None:
+            m = self._mmaps[i] = self.shards[i].load()
+        return m
+
+    @property
+    def shard_sizes(self) -> List[int]:
+        if not hasattr(self, "_shard_sizes"):
+            self._shard_sizes = [self._mmap(i)[0].shape[0]
+                                 for i in range(len(self.shards))]
+        return self._shard_sizes
+
+    @property
+    def shard_offsets(self) -> np.ndarray:
+        """offsets[i] = global index of shard i's first row (+ total at end)."""
+        if not hasattr(self, "_shard_offsets"):
+            self._shard_offsets = np.concatenate(
+                [[0], np.cumsum(self.shard_sizes)])
+        return self._shard_offsets
+
+    def gather(self, indices: np.ndarray):
+        """Rows at the given *global* example indices, in the given order.
+        Returns (tokens, mask); applies the simulated network delay once
+        per shard touched when unstaged."""
+        idx = np.asarray(indices, np.int64)
+        off = self.shard_offsets
+        sid = np.searchsorted(off, idx, side="right") - 1
+        toks_out = None
+        mask_out = None
+        for si in np.unique(sid):
+            s = self.shards[int(si)]
+            if self.network is not None:
+                time.sleep(min(0.05, self.network.read_delay(s.nbytes)))
+            toks, mask = self._mmap(int(si))
+            sel = sid == si
+            rows = idx[sel] - off[int(si)]
+            if toks_out is None:
+                toks_out = np.empty((len(idx),) + toks.shape[1:], toks.dtype)
+                mask_out = np.empty((len(idx),) + mask.shape[1:], mask.dtype)
+            toks_out[sel] = toks[rows]
+            mask_out[sel] = mask[rows]
+        return toks_out, mask_out
+
     @property
     def n_examples(self) -> int:
-        return sum(np.load(s.tokens_path, mmap_mode="r").shape[0]
-                   for s in self.shards)
+        return int(sum(self.shard_sizes))

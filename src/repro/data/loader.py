@@ -111,6 +111,107 @@ class PrefetchLoader:
         return self.consumer_stalls / self.batches_out
 
 
+class OrderedPrefetchLoader:
+    """Deterministic, order-preserving parallel prefetch.
+
+    Workers compute batches by *global batch index*: worker ``w`` of ``W``
+    produces indices ``start+w, start+w+W, ...`` into its own bounded
+    queue, and the consumer round-robins the queues in index order — so
+    the emitted sequence is exactly ``batch_fn(start), batch_fn(start+1),
+    ...`` no matter how many workers race ahead.  This is the loader the
+    resumable :class:`repro.data.pipeline.DataPipeline` builds on: the
+    whole stream is a pure function of ``start``, so a checkpoint only
+    needs the integer cursor, not queue contents or thread state.
+
+    ``batch_fn(k)`` must be thread-safe and a pure function of ``k``.
+    """
+
+    def __init__(self, batch_fn: Callable[[int], Dict[str, np.ndarray]], *,
+                 n_workers: int = 1, prefetch: int = 4, start: int = 0):
+        self.batch_fn = batch_fn
+        self.n_workers = max(1, n_workers)
+        self.prefetch = max(1, prefetch)
+        self.start = start
+        self._qs = [queue.Queue(maxsize=self.prefetch)
+                    for _ in range(self.n_workers)]
+        self._stop = threading.Event()
+        self._threads: list = []
+        self._err: Optional[BaseException] = None
+        self.batches_out = 0
+        self.consumer_stalls = 0
+
+    def _worker(self, wid: int):
+        k = self.start + wid
+        try:
+            while not self._stop.is_set():
+                batch = self.batch_fn(k)
+                while not self._stop.is_set():
+                    try:
+                        self._qs[wid].put(batch, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                k += self.n_workers
+        except BaseException as e:  # noqa: BLE001 — re-raised on consumer
+            self._err = e
+            self._stop.set()        # wake the consumer instead of hanging
+
+    def start_workers(self):
+        for w in range(self.n_workers):
+            t = threading.Thread(target=self._worker, args=(w,), daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self):
+        self._stop.set()
+        for q in self._qs:  # unblock any consumer waiting on an empty queue
+            try:
+                q.put_nowait(_SENTINEL)
+            except queue.Full:
+                pass
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads.clear()
+
+    def _check(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        if not self._threads and not self._stop.is_set():
+            self.start_workers()
+        k = 0
+        while True:
+            q = self._qs[k % self.n_workers]
+            try:
+                b = q.get_nowait()
+            except queue.Empty:
+                self.consumer_stalls += 1
+                b = None
+                while b is None:
+                    if self._stop.is_set():
+                        self._check()
+                        return
+                    try:
+                        b = q.get(timeout=0.05)
+                    except queue.Empty:
+                        continue
+            if b is _SENTINEL:
+                self._check()
+                return
+            self.batches_out += 1
+            k += 1
+            yield b
+
+    @property
+    def stall_fraction(self) -> float:
+        if self.batches_out == 0:
+            return 1.0
+        return self.consumer_stalls / self.batches_out
+
+
 def measure_throughput(ds: StagedDataset, batch_size: int, n_workers: int,
                        *, n_batches: int = 50, step_time_s: float = 0.0,
                        work_fn=None, seq_len=None) -> Dict[str, float]:

@@ -24,6 +24,71 @@ from jax.sharding import PartitionSpec as P
 
 Candidate = Union[str, Tuple[str, ...]]
 
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable ``shard_map``: ``jax.shard_map`` (>= 0.6, with
+    ``check_vma``) or ``jax.experimental.shard_map.shard_map`` (0.4.x,
+    where the same knob is spelled ``check_rep``)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as fn
+
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable optimization barrier
+# ---------------------------------------------------------------------------
+#
+# jax.lax.optimization_barrier has no JVP rule on jax 0.4.37, so any train
+# step that pins values with it (attention pins q/k/v dtypes before the k/v
+# all-gathers) cannot be differentiated.  The barrier is semantically the
+# identity, so a custom_jvp passthrough is exact: the primal keeps the
+# barrier (preserving the scheduling constraint), the tangent passes
+# through untouched (reverse mode transposes the identity).
+
+
+@jax.custom_jvp
+def optimization_barrier(operands):
+    return jax.lax.optimization_barrier(operands)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (operands,), (dots,) = primals, tangents
+    return optimization_barrier(operands), dots
+
+
+# ---------------------------------------------------------------------------
+# Per-host batch / example slicing (multi-host data parallelism)
+# ---------------------------------------------------------------------------
+
+
+def local_batch_size(global_batch: int, process_count: int) -> int:
+    """Per-host batch size; the global batch must divide evenly so every
+    host dispatches the same program shape."""
+    if global_batch % max(1, process_count) != 0:
+        raise ValueError(
+            f"global_batch={global_batch} not divisible by "
+            f"process_count={process_count}")
+    return global_batch // max(1, process_count)
+
+
+def process_batch_slice(global_batch: int, process_index: int,
+                        process_count: int) -> slice:
+    """Contiguous slice of a global batch owned by ``process_index``.
+    Hosts own disjoint, covering slices: host p takes rows
+    [p*b_loc, (p+1)*b_loc) of every global batch."""
+    b_loc = local_batch_size(global_batch, process_count)
+    if not 0 <= process_index < process_count:
+        raise ValueError(
+            f"process_index={process_index} out of range "
+            f"[0, {process_count})")
+    return slice(process_index * b_loc, (process_index + 1) * b_loc)
+
 # rule tables: logical axis -> candidates (tried in order)
 _TP = {
     "heads": ("model",),
@@ -71,7 +136,10 @@ def spec_for(axes: Optional[Sequence[Optional[str]]], shape: Sequence[int],
                 continue
             if dim % _axis_size(mesh, cand) != 0:
                 continue
-            assigned = cand if isinstance(cand, str) else tuple(cand)
+            # normalize 1-tuples to the bare axis name (the canonical
+            # PartitionSpec spelling; matches batch_spec's unwrapping)
+            assigned = cand if isinstance(cand, str) else (
+                cand[0] if len(cand) == 1 else tuple(cand))
             used.update(cand_axes)
             break
         out.append(assigned)
@@ -185,7 +253,7 @@ def flash_attn_ctx(cfg, mesh: Mesh, mode: str, global_batch: int,
                 return kops.flash_attention(ql, kl_, vl_, causal, window,
                                             softcap, scale)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
             out_specs=qspec, check_vma=False)(q, k, v)
 

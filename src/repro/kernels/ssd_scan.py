@@ -49,7 +49,10 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref, state_scr, *,
     diff = acs[:, None] - acs[None, :]
     li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
     si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
-    seg = jnp.where(si <= li, scores * jnp.exp(diff), 0.0) * dt[None, :]
+    # mask the exponent, not the product: exp(diff) overflows for s > l
+    # and 0*inf poisons interpret-mode gradients (same fix as ssd_chunked)
+    decay = jnp.exp(jnp.where(si <= li, diff, -jnp.inf))
+    seg = scores * decay * dt[None, :]
     y_intra = jax.lax.dot_general(
         seg, x, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)     # (L, P)

@@ -1,12 +1,20 @@
 """Training launcher.
 
   PYTHONPATH=src python -m repro.launch.train --arch bert-mlm-120m \
-      --steps 200 --batch 16 --seq 128 [--reduced] [--workers 2]
+      --steps 200 --batch 16 --seq 128 [--reduced] [--workers 2] \
+      [--ckpt-dir runs/ck --ckpt-every 50] [--resume]
 
-Runs the paper's full pipeline on whatever devices exist: synthesize a
-binary-function corpus, tokenize+pack it (R1), stage it node-locally (R2),
-tune loader workers (R3), then pretrain with the pjit train step.  On a
-real TPU pod the same entry point picks up the production mesh.
+Runs the paper's full pipeline on whatever devices exist, now through the
+deterministic ``DataPipeline``: synthesize a binary-function corpus,
+tokenize+pack it (R1), stage it node-locally (R2), auto-tune loader
+workers and device-prefetch depth off the runner's measured step time
+(R3), then pretrain with the sharding-aware async StepRunner/TrainLoop.
+``--ckpt-dir`` writes resumable per-process shard checkpoints
+(``ckpt-<step>/shard-<pidx>.npz`` + manifest) and ``--resume`` continues
+bit-exact from the newest complete one — same step, same next batch,
+same loss trajectory.  ``--process-index/--process-count`` set this
+host's slice of the deterministic global batch order (under
+``jax.distributed`` they default from the runtime).
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import argparse
 import dataclasses
 import os
 import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +33,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="bert-mlm-120m")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=16,
+                    help="per-host batch size")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--reduced", action="store_true",
@@ -33,22 +43,35 @@ def main():
                     help="loader workers; 0 = auto-tune (R3)")
     ap.add_argument("--n-functions", type=int, default=3000)
     ap.add_argument("--data-dir", default=None)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--data-seed", type=int, default=0,
+                    help="pipeline order/augmentation seed")
+    ap.add_argument("--ckpt", default=None,
+                    help="flat single-file checkpoint path (legacy)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="sharded resumable checkpoint directory")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="background-save every N steps (0 = final only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest complete checkpoint "
+                         "in --ckpt-dir")
+    ap.add_argument("--process-index", type=int, default=None)
+    ap.add_argument("--process-count", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
     from repro.configs import get_config, reduced as reduce_cfg
     from repro.configs.base import RunConfig, ShapeConfig
     from repro.core.mlm import mask_tokens
-    from repro.data import (ByteBPETokenizer, NetworkFS, PrefetchLoader,
-                            StagedDataset, pack_corpus, read_raw_corpus,
-                            size_reduction, tune_workers, write_raw_corpus)
+    from repro.data import DataPipeline, NetworkFS
     from repro.launch.mesh import make_host_mesh
     from repro.models import build_model
     from repro.train.optimizer import AdamWConfig
-    from repro.train.runner import StepRunner, TrainLoop
+    from repro.train.runner import StepRunner, TrainLoop, resume
+
+    pidx = args.process_index if args.process_index is not None \
+        else jax.process_index()
+    pcount = args.process_count if args.process_count is not None \
+        else jax.process_count()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -56,23 +79,6 @@ def main():
     cfg = dataclasses.replace(cfg, max_position=max(cfg.max_position,
                                                     args.seq))
     is_mlm = cfg.family == "encoder"
-
-    data_dir = args.data_dir or tempfile.mkdtemp(prefix="repro_data_")
-    raw = os.path.join(data_dir, "raw.jsonl")
-    print(f"[data] synthesizing {args.n_functions} functions -> {raw}")
-    nbytes = write_raw_corpus(raw, args.n_functions, seed=0)
-    fns = list(read_raw_corpus(raw))
-    tok = ByteBPETokenizer.train(fns[:64], vocab_size=cfg.vocab_size,
-                                 max_merges=300)
-    shards = pack_corpus(iter(fns), tok, os.path.join(data_dir, "packed"),
-                         seq_len=args.seq)
-    print(f"[R1] raw {nbytes/1e6:.1f}MB -> packed "
-          f"({size_reduction(nbytes, shards)*100:.1f}% reduction)")
-
-    ds = StagedDataset(shards, network=NetworkFS(agg_bw=2e9, readers=8),
-                       local_dir=os.path.join(data_dir, "local"))
-    t = ds.stage()
-    print(f"[R2] staged to node-local storage in {t:.2f}s")
 
     def work(batch, rng):
         if not is_mlm:
@@ -86,14 +92,19 @@ def main():
         return {"tokens": np.asarray(inputs), "labels": np.asarray(labels),
                 "loss_mask": np.asarray(mask) * batch["attn_mask"]}
 
-    n_workers = args.workers
-    if n_workers == 0:
-        tuned = tune_workers(ds, args.batch, step_time_s=0.05,
-                             max_workers=4, n_batches=10, work_fn=work)
-        n_workers = tuned["chosen"]
-        print(f"[R3] auto-tuned loader workers: {n_workers}")
-    loader = PrefetchLoader(ds, args.batch, n_workers=n_workers,
-                            work_fn=work).start()
+    data_dir = args.data_dir or tempfile.mkdtemp(prefix="repro_data_")
+    print(f"[data] building pipeline in {data_dir} "
+          f"(host {pidx}/{pcount}, per-host batch {args.batch})")
+    t0 = time.perf_counter()
+    pipeline = DataPipeline.build(
+        data_dir, n_functions=args.n_functions, seq_len=args.seq,
+        batch_size=args.batch, vocab_size=cfg.vocab_size,
+        network=NetworkFS(agg_bw=2e9, readers=8),
+        seed=args.data_seed, process_index=pidx, process_count=pcount,
+        n_workers=max(1, args.workers), work_fn=work)
+    print(f"[R1+R2] packed+staged {pipeline.ds.n_examples} examples "
+          f"({pipeline.batches_per_epoch} global batches/epoch) "
+          f"in {time.perf_counter() - t0:.2f}s")
 
     model = build_model(cfg)
     run = RunConfig(model=cfg, shape=ShapeConfig("cli", args.seq, args.batch,
@@ -105,15 +116,58 @@ def main():
 
     # data-parallel host mesh over whatever devices exist: the runner jits
     # ONCE with explicit state/batch shardings + donated state buffers
-    n_dev = len(jax.devices())
+    n_dev = len(jax.local_devices())
     mesh = make_host_mesh(data=n_dev if args.batch % n_dev == 0 else 1)
     runner = StepRunner(model, run, opt, mesh)
-    loop = TrainLoop(runner, log_every=args.log_every, ckpt_path=args.ckpt,
-                     ckpt_every=args.ckpt_every if args.ckpt else 0)
+
+    if args.workers == 0:
+        # R3 end-to-end: measure the real compiled step time on a scratch
+        # state (so the training trajectory — and resume determinism — is
+        # untouched), then grow workers / prefetch depth until the
+        # consumer stops stalling, and no more
+        scratch = runner.init_state(seed=123)
+        probe_batch = {k: jax.device_put(v, runner.batch_shardings.get(k))
+                       for k, v in pipeline.peek_batch().items()}
+        runner.compile(scratch, probe_batch)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            scratch, _ = runner(scratch, probe_batch)
+        jax.block_until_ready(scratch)
+        step_time = (time.perf_counter() - t0) / 3
+        del scratch
+        tuned = pipeline.autotune(step_time_s=step_time, n_batches=12)
+        print(f"[R3] step={step_time*1e3:.1f}ms -> auto-tuned "
+              f"workers={tuned['n_workers']} "
+              f"device_prefetch={tuned['device_prefetch']} "
+              f"(stall={tuned['stall_fraction']:.2f})")
+
+    state, start_step = None, 0
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume needs --ckpt-dir")
+        from repro.train import checkpoint as ckpt
+
+        if ckpt.latest_step(args.ckpt_dir) is None:
+            print(f"[resume] no complete checkpoint in {args.ckpt_dir}; "
+                  "starting fresh")
+        else:
+            state, start_step = resume(args.ckpt_dir, runner,
+                                       pipeline=pipeline,
+                                       process_index=pidx)
+            print(f"[resume] host {pidx} restored shard at step "
+                  f"{start_step} from {args.ckpt_dir}")
+
+    loop = TrainLoop(runner, log_every=args.log_every,
+                     ckpt_path=args.ckpt, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every
+                     if (args.ckpt or args.ckpt_dir) else 0,
+                     process_index=pidx, process_count=pcount)
     print(f"[train] {cfg.name}: {model.cfg.n_layers}L d={cfg.d_model} "
-          f"on {n_dev} device(s), mesh {dict(mesh.shape)}")
-    state, log = loop.run(loader, args.steps)
-    loader.stop()
+          f"on {n_dev} device(s), mesh {dict(mesh.shape)}, "
+          f"steps {start_step}->{args.steps}")
+    state, log = loop.run(pipeline, args.steps, state=state,
+                          start_step=start_step)
+    pipeline.close()
     for s, m, sps, tps, mfu in zip(log.steps, log.metrics, log.samples_per_s,
                                    log.tokens_per_s, log.mfu):
         print(f"  step {s:5d} loss={m['loss']:.4f} xent={m['xent']:.4f} "

@@ -172,8 +172,10 @@ def apply_moe_ep(p, x, cfg: ModelConfig, mesh, *, batch_axes, expert_axis):
     for k in ("wi", "wg", "wo"):
         wspec[k] = P(expert_axis)
 
+    from repro.distributed.sharding import shard_map
+
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(wspec, P(bspec[0] if bspec else None, None, None)),
         out_specs=(P(bspec[0] if bspec else None, None, None), P()),

@@ -134,10 +134,14 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
     )
     # intra-chunk (dual / attention-like) contribution
     scores = jnp.einsum("bclhn,bcshn->bchls", Ch.astype(f32), Bh.astype(f32))
-    # L_mat[l,s] = exp(acs[l] - acs[s]) for s <= l
+    # L_mat[l,s] = exp(acs[l] - acs[s]) for s <= l.  Mask BEFORE the exp:
+    # for s > l the difference is positive and grows with chunk length
+    # (dt·|A|·L easily exceeds ~88, the f32 exp overflow point), and
+    # where(mask, exp(diff), 0) with exp(diff)=inf is NaN in the backward
+    # pass (0·inf) even though the forward value is discarded.
     diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]      # (B,nc,L,S,H)
     lmask = jnp.tril(jnp.ones((L, L), bool))
-    lmat = jnp.where(lmask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    lmat = jnp.exp(jnp.where(lmask[None, None, :, :, None], diff, -jnp.inf))
     seg = scores * lmat.transpose(0, 1, 4, 2, 3) \
         * dts.transpose(0, 1, 3, 2)[:, :, :, None, :]
     y_intra = jnp.einsum("bchls,bcshp->bclhp", seg, xs.astype(f32))

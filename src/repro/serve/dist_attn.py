@@ -47,8 +47,10 @@ def dist_decode_attend(q, k_new, v_new, cache, pos, cfg, dist):
     scale = cfg.query_scale if cfg.query_scale else q.shape[-1] ** -0.5
     cap = cfg.attn_logit_softcap
 
+    from repro.distributed.sharding import shard_map
+
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(qspec, qspec, qspec, {"k": cspec, "v": cspec}, P()),
         out_specs=(qspec, {"k": cspec, "v": cspec}),
         check_vma=False,

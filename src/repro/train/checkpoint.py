@@ -1,8 +1,30 @@
 """Checkpointing: flattened-path .npz save/restore (no orbax dependency).
 
-Works on any pytree of arrays (params, optimizer state).  Multi-host
-sharded saves would add a process-index suffix per shard; on this
-single-process container the full tree is materialized to host memory.
+Two layouts:
+
+* Flat (seed): one ``<path>.npz`` + ``<path>.meta.json`` holding the whole
+  tree — single-process convenience, kept for existing callers.
+
+* Sharded (multi-host): one directory per step::
+
+      <base>/ckpt-<step:08d>/
+          shard-<pidx:05d>.npz            # process p's state arrays
+          shard-<pidx:05d>.pipeline.json  # its DataPipeline position
+          manifest.json                   # written LAST, by process 0
+
+  Every process writes — and on restore reads — ONLY its own shard, so
+  checkpoint I/O parallelizes over hosts (the Frontier/survey
+  prerequisite for scaling data parallelism) and no host ever
+  materializes another host's arrays.  The manifest is the commit record:
+  a step directory without one (e.g. a run killed mid-save) is ignored by
+  ``latest_step``/``restore_sharded``.  Shard files are written to a temp
+  name and os.replace'd, so a partially-written shard can never be
+  confused for a complete one.
+
+``AsyncCheckpointer`` drives either layout from a background thread: the
+device->host snapshot happens on the caller's thread (donation reuses the
+state buffers in place on the very next step), serialization and disk I/O
+happen off the critical path.
 """
 from __future__ import annotations
 
@@ -11,7 +33,7 @@ import os
 import queue
 import re
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -40,6 +62,108 @@ def save(path: str, tree, step: int | None = None) -> str:
     return path
 
 
+# ---------------------------------------------------------------------------
+# Sharded per-process checkpoints
+# ---------------------------------------------------------------------------
+
+
+def step_dir(base_dir: str, step: int) -> str:
+    return os.path.join(base_dir, f"ckpt-{step:08d}")
+
+
+def _shard_name(process_index: int) -> str:
+    return f"shard-{process_index:05d}.npz"
+
+
+def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
+                 process_count: int = 1,
+                 pipeline_state: Optional[Dict[str, Any]] = None) -> str:
+    """Write this process's shard of checkpoint ``step`` (see module
+    docstring for the layout).  ``pipeline_state`` is the serialized
+    ``DataPipeline.state_at(step)`` dict — the input-side half of the
+    resume.  Returns the step directory."""
+    d = step_dir(base_dir, step)
+    os.makedirs(d, exist_ok=True)
+    flat = _flatten(tree)
+    shard = os.path.join(d, _shard_name(process_index))
+    tmp = shard + f".tmp.{os.getpid()}.npz"  # np.savez appends .npz otherwise
+    np.savez(tmp, **flat)
+    os.replace(tmp, shard)
+    if pipeline_state is not None:
+        if hasattr(pipeline_state, "to_json"):
+            pipeline_state = pipeline_state.to_json()
+        pj = re.sub(r"\.npz$", ".pipeline.json", shard)
+        with open(pj + ".tmp", "w") as f:
+            json.dump(pipeline_state, f)
+        os.replace(pj + ".tmp", pj)
+    if process_index == 0:
+        # commit record: written after process 0's own shard.  Other
+        # processes' shards are validated at restore time (restore_sharded
+        # requires the reader's own shard file; latest_step requires all).
+        manifest = {"step": step, "process_count": process_count,
+                    "n_arrays": len(flat), "format": 1}
+        mp = os.path.join(d, "manifest.json")
+        with open(mp + ".tmp", "w") as f:
+            json.dump(manifest, f)
+        os.replace(mp + ".tmp", mp)
+    return d
+
+
+def _complete_steps(base_dir: str):
+    if not os.path.isdir(base_dir):
+        return
+    for name in sorted(os.listdir(base_dir)):
+        m = re.fullmatch(r"ckpt-(\d+)", name)
+        if not m:
+            continue
+        d = os.path.join(base_dir, name)
+        mp = os.path.join(d, "manifest.json")
+        if not os.path.exists(mp):
+            continue
+        with open(mp) as f:
+            manifest = json.load(f)
+        if all(os.path.exists(os.path.join(d, _shard_name(p)))
+               for p in range(manifest["process_count"])):
+            yield int(m.group(1)), manifest
+
+
+def latest_step(base_dir: str) -> Optional[int]:
+    """Newest step with a manifest AND every shard present, or None."""
+    steps = [s for s, _ in _complete_steps(base_dir)]
+    return max(steps) if steps else None
+
+
+def restore_sharded(base_dir: str, like, *, step: Optional[int] = None,
+                    process_index: int = 0
+                    ) -> Tuple[Any, Optional[Dict[str, Any]],
+                               Dict[str, Any]]:
+    """Restore this process's shard into the structure of ``like`` (a
+    pytree of arrays or ShapeDtypeStructs).  ``step=None`` picks the
+    newest complete checkpoint.  Returns ``(tree, pipeline_state_dict,
+    manifest)``; ``pipeline_state_dict`` is None when the checkpoint was
+    taken without a pipeline."""
+    if step is None:
+        step = latest_step(base_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no complete sharded checkpoint under {base_dir}")
+    d = step_dir(base_dir, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    if process_index >= manifest["process_count"]:
+        raise ValueError(
+            f"process_index {process_index} >= checkpoint process_count "
+            f"{manifest['process_count']}")
+    shard = os.path.join(d, _shard_name(process_index))
+    tree = restore(shard, like)
+    pstate = None
+    pj = re.sub(r"\.npz$", ".pipeline.json", shard)
+    if os.path.exists(pj):
+        with open(pj) as f:
+            pstate = json.load(f)
+    return tree, pstate, manifest
+
+
 class AsyncCheckpointer:
     """Background-thread checkpoint writer.
 
@@ -52,10 +176,20 @@ class AsyncCheckpointer:
 
     Use as a context manager, or call :meth:`close` to flush.  Worker
     exceptions are re-raised on the next ``save``/``wait``/``close``.
+
+    With ``sharded=True``, ``path`` is the checkpoint *base directory*
+    and each ``save(step=...)`` writes this process's
+    ``ckpt-<step>/shard-<pidx>.npz`` (+ pipeline state, + manifest on
+    process 0) via :func:`save_sharded`.
     """
 
-    def __init__(self, path: str, max_pending: int = 2):
+    def __init__(self, path: str, max_pending: int = 2, *,
+                 sharded: bool = False, process_index: int = 0,
+                 process_count: int = 1):
         self.path = path
+        self.sharded = sharded
+        self.process_index = process_index
+        self.process_count = process_count
         self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._err: Optional[BaseException] = None
         self.n_saved = 0
@@ -68,8 +202,14 @@ class AsyncCheckpointer:
             try:
                 if item is None:
                     return
-                host_tree, step = item
-                save(self.path, host_tree, step=step)
+                host_tree, step, pstate = item
+                if self.sharded:
+                    save_sharded(self.path, host_tree, step=step,
+                                 process_index=self.process_index,
+                                 process_count=self.process_count,
+                                 pipeline_state=pstate)
+                else:
+                    save(self.path, host_tree, step=step)
                 self.n_saved += 1
             except BaseException as e:  # noqa: BLE001 — surface on caller
                 self._err = e
@@ -81,11 +221,16 @@ class AsyncCheckpointer:
             err, self._err = self._err, None
             raise err
 
-    def save(self, tree, step: Optional[int] = None):
+    def save(self, tree, step: Optional[int] = None,
+             pipeline_state: Optional[Dict[str, Any]] = None):
         """Snapshot ``tree`` to host memory and enqueue the write."""
         self._check()
+        if self.sharded and step is None:
+            raise ValueError("sharded saves need an explicit step")
+        if pipeline_state is not None and hasattr(pipeline_state, "to_json"):
+            pipeline_state = pipeline_state.to_json()
         host = jax.tree_util.tree_map(np.asarray, tree)
-        self._q.put((host, step))
+        self._q.put((host, step, pipeline_state))
 
     def wait(self):
         """Block until every enqueued checkpoint is on disk."""

@@ -252,17 +252,34 @@ class TrainLoop:
     time spent blocked is accounted in ``telemetry['host_blocked_s']`` /
     ``['stall_fraction']`` — the figure of merit the ``train_overlap``
     benchmark compares against the seed-style loop.
+
+    Checkpointing has two shapes: the seed's flat single-file
+    ``ckpt_path``, and the resumable sharded layout ``ckpt_dir`` — each
+    process writes only its own ``ckpt-<step>/shard-<pidx>.npz``, and
+    when ``data`` is a :class:`repro.data.pipeline.DataPipeline` the
+    serialized input position rides along, so a later ``run(...,
+    start_step=s)`` on a restored state replays the exact uninterrupted
+    trajectory (the pipeline position for step ``s`` is analytic —
+    device-prefetch read-ahead can never skew the resume point).
     """
 
     def __init__(self, runner: StepRunner, *, log_every: int = 10,
                  ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_dir: Optional[str] = None,
+                 process_index: int = 0, process_count: int = 1,
                  async_checkpoint: bool = True, device_prefetch: bool = True,
                  prefetch_size: int = 2, aot_compile: bool = True,
                  metrics_lag: int = 8,
                  peak_flops: float = DEFAULT_PEAK_FLOPS):
+        if ckpt_path and ckpt_dir:
+            raise ValueError("pass ckpt_path (flat) or ckpt_dir (sharded), "
+                             "not both")
         self.runner = runner
         self.log_every = max(1, log_every)
         self.ckpt_path, self.ckpt_every = ckpt_path, ckpt_every
+        self.ckpt_dir = ckpt_dir
+        self.process_index = process_index
+        self.process_count = process_count
         self.async_checkpoint = async_checkpoint
         self.device_prefetch = device_prefetch
         self.prefetch_size = prefetch_size
@@ -271,15 +288,35 @@ class TrainLoop:
         self.peak_flops = peak_flops
 
     def run(self, data: Iterable[Dict[str, Any]], steps: int, *,
-            state=None, seed: int = 0):
-        """Returns (state, TrainerLog)."""
+            state=None, seed: int = 0, start_step: int = 0):
+        """Run steps ``[start_step, steps)``; returns (state, TrainerLog).
+
+        ``start_step`` > 0 is the resume path: ``state`` should be the
+        restored checkpoint and, when ``data`` is a DataPipeline, its
+        ``restore()`` must have been aimed at the same step (or simply
+        at ``pipeline.start_step`` — asserted below)."""
+        from repro.data.pipeline import DataPipeline
+
         runner = self.runner
         if state is None:
             state = runner.init_state(seed)
         else:
             state = runner.place_state(state)
 
-        if self.device_prefetch:
+        pipeline: Optional[DataPipeline] = None
+        pipeline_loader = None
+        if isinstance(data, DataPipeline):
+            pipeline = data
+            if pipeline.start_step != start_step:
+                raise ValueError(
+                    f"pipeline positioned at step {pipeline.start_step} "
+                    f"but loop starts at {start_step}")
+            if self.device_prefetch:
+                it = pipeline.device_batches(runner.batch_shardings)
+            else:
+                it = iter(pipeline.host_batches())
+            pipeline_loader = pipeline.last_loader  # owned by this run
+        elif self.device_prefetch:
             it = iter(DevicePrefetch(data, shardings=runner.batch_shardings,
                                      size=self.prefetch_size))
         else:
@@ -288,7 +325,12 @@ class TrainLoop:
         log = TrainerLog()
         async_metrics = AsyncMetrics(max_pending=self.metrics_lag)
         saver = None
-        if self.ckpt_path and self.async_checkpoint:
+        if self.ckpt_dir and self.async_checkpoint:
+            saver = ckpt.AsyncCheckpointer(
+                self.ckpt_dir, sharded=True,
+                process_index=self.process_index,
+                process_count=self.process_count)
+        elif self.ckpt_path and self.async_checkpoint:
             saver = ckpt.AsyncCheckpointer(self.ckpt_path)
 
         blocked = 0.0          # host time spent waiting (stalls)
@@ -296,7 +338,7 @@ class TrainLoop:
         tokens_per_step = None
         t_start = time.perf_counter()
         t_last_log = t_start
-        last_logged = -1
+        last_logged = start_step - 1
 
         def resolve_into_log(entries):
             for meta, m in entries:
@@ -309,14 +351,27 @@ class TrainLoop:
 
         last_saved = -1
 
+        def write_ckpt(st, step_no):
+            pstate = pipeline.state_at(step_no).to_json() \
+                if pipeline is not None else None
+            if saver is not None:
+                saver.save(st, step=step_no, pipeline_state=pstate)
+            elif self.ckpt_dir:
+                ckpt.save_sharded(self.ckpt_dir, st, step=step_no,
+                                  process_index=self.process_index,
+                                  process_count=self.process_count,
+                                  pipeline_state=pstate)
+            else:
+                ckpt.save(self.ckpt_path, st, step=step_no)
+
         try:
             t_iter = time.perf_counter()
-            for i in range(steps):
+            for i in range(start_step, steps):
                 tw = time.perf_counter()
                 batch = next(it)
                 blocked += time.perf_counter() - tw
 
-                if i == 0:
+                if i == start_step:
                     if tokens_per_step is None:
                         tok = batch["tokens"]
                         tokens_per_step = int(tok.shape[0] * tok.shape[1])
@@ -328,10 +383,10 @@ class TrainLoop:
                 now = time.perf_counter()
                 dt = now - t_iter
                 t_iter = now
-                if i > 0:  # first iteration is dominated by compilation
+                if i > start_step:  # first iteration is dominated by compile
                     ema = dt if ema is None else 0.9 * ema + 0.1 * dt
 
-                if (i + 1) % self.log_every == 0 or i == 0 \
+                if (i + 1) % self.log_every == 0 or i == start_step \
                         or i == steps - 1:
                     n = i - last_logged
                     window = max(now - t_last_log, 1e-9)
@@ -354,24 +409,22 @@ class TrainLoop:
                     resolve_into_log(async_metrics.poll())
                     blocked += time.perf_counter() - tw
 
-                if self.ckpt_path and self.ckpt_every \
+                if (self.ckpt_path or self.ckpt_dir) and self.ckpt_every \
                         and (i + 1) % self.ckpt_every == 0:
                     tw = time.perf_counter()
-                    if saver is not None:
-                        saver.save(state, step=i + 1)
-                    else:
-                        ckpt.save(self.ckpt_path, state, step=i + 1)
+                    write_ckpt(state, i + 1)
                     blocked += time.perf_counter() - tw
                     last_saved = i + 1
 
             tw = time.perf_counter()
             resolve_into_log(async_metrics.drain())
             jax.block_until_ready(state)
-            if self.ckpt_path and last_saved != steps:
-                if saver is not None:
-                    saver.save(state, step=steps)
-                else:
-                    ckpt.save(self.ckpt_path, state, step=steps)
+            # steps > start_step: a resumed run that had nothing to do must
+            # not rewrite (or mislabel) an existing checkpoint with the
+            # restored state under a different step number
+            if (self.ckpt_path or self.ckpt_dir) and last_saved != steps \
+                    and steps > start_step:
+                write_ckpt(state, steps)
             if saver is not None:
                 saver.close()
                 saver = None
@@ -379,15 +432,44 @@ class TrainLoop:
         finally:
             if saver is not None:  # exception path: still flush the queue
                 saver.close()
+            if pipeline_loader is not None:  # this run started it: stop it
+                pipeline_loader.stop()
 
         total = time.perf_counter() - t_start
+        n_steps = steps - start_step
         log.telemetry = {
             "total_s": total,
             "host_blocked_s": blocked,
             "stall_fraction": blocked / max(total, 1e-9),
             "step_time_ema": ema if ema is not None else float("nan"),
-            "tokens_per_s": steps * (tokens_per_step or 0) / max(total, 1e-9),
+            "tokens_per_s": n_steps * (tokens_per_step or 0)
+                            / max(total, 1e-9),
             "n_traces": runner.n_traces,
             "forced_metric_resolves": async_metrics.forced_resolves,
         }
         return state, log
+
+
+def resume(ckpt_dir: str, runner: StepRunner, *,
+           pipeline=None, process_index: int = 0,
+           step: Optional[int] = None):
+    """Restore this process's latest (or given) sharded checkpoint.
+
+    Returns ``(state, start_step)`` with ``state`` placed on the runner's
+    sharded layout, ready for ``TrainLoop.run(pipeline, total_steps,
+    state=state, start_step=start_step)``.  When ``pipeline`` is given it
+    is re-aimed at the checkpoint's input position (and the stored
+    layout is validated against the pipeline's).  Restores through the
+    run's *abstract* state spec, so no throwaway init_state allocation.
+    """
+    from repro.train.train_step import abstract_state
+
+    like = abstract_state(runner.model, runner.run)
+    state, pstate, manifest = ckpt.restore_sharded(
+        ckpt_dir, like, step=step, process_index=process_index)
+    if pipeline is not None:
+        if pstate is None:
+            raise ValueError(
+                f"checkpoint step {manifest['step']} has no pipeline state")
+        pipeline.restore(pstate)
+    return runner.place_state(state), manifest["step"]

@@ -115,7 +115,11 @@ def build_attn_ctx(cfg, mesh, run: RunConfig, global_batch: int,
                                    seq_len)
         if flash is not None:
             ctx["flash"] = flash
-    if "flash" not in ctx:
+    if "flash" not in ctx and jax.default_backend() != "cpu":
+        # context-parallel q/score sharding is a TPU perf feature; on the
+        # CPU backend (virtual-device tests) the XLA SPMD partitioner
+        # segfaults partitioning the seq-sharded q pattern (jax 0.4.37),
+        # and CP buys nothing on a host CPU anyway
         cp = shd.attn_shard_ctx(cfg, mesh, run.sharding, global_batch,
                                 seq_len)
         if cp is not None:

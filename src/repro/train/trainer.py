@@ -15,18 +15,23 @@ from typing import Any, Dict, Iterable, Optional
 from repro.configs.base import RunConfig
 from repro.models.model import Model
 from repro.train.optimizer import AdamWConfig
-from repro.train.runner import StepRunner, TrainerLog, TrainLoop  # noqa: F401
+from repro.train.runner import (StepRunner, TrainerLog,  # noqa: F401
+                                TrainLoop, resume)
 
 
 def train(model: Model, run: RunConfig, opt: AdamWConfig,
           data: Iterable[Dict[str, Any]], *, steps: int,
           seed: int = 0, mesh=None, log_every: int = 10,
           ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+          ckpt_dir: Optional[str] = None, start_step: int = 0,
+          process_index: int = 0, process_count: int = 1,
           state=None, runner: Optional[StepRunner] = None,
           device_prefetch: bool = True, async_checkpoint: bool = True,
           aot_compile: bool = True, donate: bool = True,
           peak_flops: Optional[float] = None) -> tuple:
-    """Returns (state, TrainerLog)."""
+    """Returns (state, TrainerLog).  ``ckpt_dir`` selects the sharded
+    resumable layout (``data`` may be a ``DataPipeline``; its position is
+    checkpointed alongside the state — see train/checkpoint.py)."""
     if runner is None:
         runner = StepRunner(model, run, opt, mesh, donate=donate)
     if state is not None and runner.donate:
@@ -39,7 +44,11 @@ def train(model: Model, run: RunConfig, opt: AdamWConfig,
         state = jax.tree_util.tree_map(jnp.array, state)
     kw = {} if peak_flops is None else {"peak_flops": peak_flops}
     loop = TrainLoop(runner, log_every=log_every, ckpt_path=ckpt_path,
-                     ckpt_every=ckpt_every, async_checkpoint=async_checkpoint,
+                     ckpt_every=ckpt_every, ckpt_dir=ckpt_dir,
+                     process_index=process_index,
+                     process_count=process_count,
+                     async_checkpoint=async_checkpoint,
                      device_prefetch=device_prefetch, aot_compile=aot_compile,
                      **kw)
-    return loop.run(data, steps, state=state, seed=seed)
+    return loop.run(data, steps, state=state, seed=seed,
+                    start_step=start_step)

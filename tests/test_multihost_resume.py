@@ -1,0 +1,144 @@
+"""Acceptance: a killed-and-resumed 2-process run reproduces the
+uninterrupted run's loss sequence exactly, with each process writing —
+and reading — only its own checkpoint shard.
+
+Two subprocesses (fresh jax each, like test_multidevice):
+  phase 1: both hosts train 0->6 uninterrupted (recording losses), then a
+           fresh 0->3 run checkpoints per-host shards and "dies".
+  phase 2: a new process resumes each host from ONLY its own shard (host
+           0 is resumed while host 1's shard is hidden, proving read
+           isolation) and runs 3->6; the concatenated per-host loss
+           sequences must equal phase 1's bit for bit.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+COMMON = """
+    import dataclasses, json, os, sys
+    import numpy as np
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.data import DataPipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.runner import StepRunner, TrainLoop, resume
+
+    TMP = os.environ["RESUME_TMP"]
+    SEQ, B, STEPS, HALF = 32, 4, 6, 3
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=64),
+                              vocab_size=512, max_position=SEQ)
+    model = build_model(cfg)
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", SEQ, B, "train"),
+                    sharding="ddp", param_dtype="float32",
+                    activation_dtype="float32")
+
+    def work(batch, rng):
+        toks = batch["tokens"]
+        return {"tokens": toks, "labels": np.roll(toks, -1, axis=1),
+                "loss_mask": batch["attn_mask"]}
+
+    def make_pipe(pidx):
+        return DataPipeline.build(os.path.join(TMP, "data"),
+                                  n_functions=150, seq_len=SEQ,
+                                  batch_size=B, vocab_size=512,
+                                  max_merges=60, n_workers=2, seed=3,
+                                  process_index=pidx, process_count=2,
+                                  work_fn=work)
+
+    def make_runner():
+        opt = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=STEPS)
+        return StepRunner(model, run, opt, make_host_mesh())
+
+    CK = os.path.join(TMP, "ck")
+"""
+
+PHASE1 = COMMON + """
+    # uninterrupted reference, both hosts
+    ref = {}
+    for pidx in (0, 1):
+        p = make_pipe(pidx)
+        _, log = TrainLoop(make_runner(), log_every=1).run(p, STEPS, seed=0)
+        p.close()
+        ref[str(pidx)] = [m["loss"] for m in log.metrics]
+    assert ref["0"] != ref["1"], "hosts must see different data slices"
+    with open(os.path.join(TMP, "ref.json"), "w") as f:
+        json.dump(ref, f)
+
+    # interrupted run: train to HALF, checkpoint per-host shard, "die"
+    for pidx in (0, 1):
+        p = make_pipe(pidx)
+        loop = TrainLoop(make_runner(), log_every=1, ckpt_dir=CK,
+                         process_index=pidx, process_count=2)
+        _, log = loop.run(p, HALF, seed=0)
+        p.close()
+        assert [m["loss"] for m in log.metrics] == ref[str(pidx)][:HALF]
+    print("phase1 OK")
+"""
+
+PHASE2 = COMMON + """
+    with open(os.path.join(TMP, "ref.json")) as f:
+        ref = json.load(f)
+
+    # read isolation: host 0 resumes with host 1's shard hidden
+    hidden = os.path.join(CK, "ckpt-%08d" % HALF, "shard-00001.npz")
+    os.rename(hidden, hidden + ".hidden")
+    tails = {}
+    for pidx in (0, 1):
+        if pidx == 1:
+            os.rename(hidden + ".hidden", hidden)
+        p = make_pipe(pidx)
+        r = make_runner()
+        state, start = resume(CK, r, pipeline=p, process_index=pidx,
+                              step=HALF)
+        assert start == HALF
+        _, log = TrainLoop(r, log_every=1).run(p, STEPS, state=state,
+                                               start_step=start)
+        p.close()
+        tails[pidx] = (log.steps, [m["loss"] for m in log.metrics])
+
+    for pidx in (0, 1):
+        steps, losses = tails[pidx]
+        assert steps == list(range(HALF + 1, STEPS + 1)), steps
+        assert losses == ref[str(pidx)][HALF:], (
+            pidx, losses, ref[str(pidx)][HALF:])
+    print("phase2 OK")
+"""
+
+
+def _run(body: str, tmp: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["RESUME_TMP"] = tmp
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_two_process_killed_and_resumed_run_is_exact(tmp_path):
+    tmp = str(tmp_path)
+    assert "phase1 OK" in _run(PHASE1, tmp)
+
+    half_dir = os.path.join(tmp, "ck", "ckpt-00000003")
+    files = sorted(os.listdir(half_dir))
+    assert files == ["manifest.json", "shard-00000.npz",
+                     "shard-00000.pipeline.json", "shard-00001.npz",
+                     "shard-00001.pipeline.json"], files
+    with open(os.path.join(half_dir, "manifest.json")) as f:
+        assert json.load(f)["process_count"] == 2
+
+    # the "kill": phase 2 is a brand-new process that only has the shards
+    assert "phase2 OK" in _run(PHASE2, tmp)

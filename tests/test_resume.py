@@ -1,0 +1,191 @@
+"""Resumable sharded checkpoints: layout, manifest commit semantics, and
+bit-exact training resume (single-process here; the 2-process version
+lives in test_multihost_resume.py)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data import DataPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import AdamWConfig
+from repro.train.runner import StepRunner, TrainLoop, resume
+
+SEQ, B, STEPS = 32, 4, 6
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer
+# ---------------------------------------------------------------------------
+
+
+def tree():
+    return {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "opt": {"step": np.int32(4)}}
+
+
+def test_sharded_save_restore_roundtrip(tmp_path):
+    base = str(tmp_path / "ck")
+    d = ckpt.save_sharded(base, tree(), step=10,
+                          pipeline_state={"global_step": 10, "seed": 0})
+    assert os.path.basename(d) == "ckpt-00000010"
+    assert sorted(os.listdir(d)) == ["manifest.json", "shard-00000.npz",
+                                     "shard-00000.pipeline.json"]
+    got, pstate, manifest = ckpt.restore_sharded(base, tree())
+    np.testing.assert_array_equal(got["params"]["w"], tree()["params"]["w"])
+    assert int(got["opt"]["step"]) == 4
+    assert pstate == {"global_step": 10, "seed": 0}
+    assert manifest["step"] == 10 and manifest["process_count"] == 1
+
+
+def test_each_process_owns_its_shard(tmp_path):
+    base = str(tmp_path / "ck")
+    t0 = {"w": np.zeros(3, np.float32)}
+    t1 = {"w": np.ones(3, np.float32)}
+    # process 1 writes first; no manifest yet -> checkpoint not committed
+    ckpt.save_sharded(base, t1, step=5, process_index=1, process_count=2)
+    assert ckpt.latest_step(base) is None
+    ckpt.save_sharded(base, t0, step=5, process_index=0, process_count=2)
+    assert ckpt.latest_step(base) == 5
+    r0, _, _ = ckpt.restore_sharded(base, t0, process_index=0)
+    r1, _, _ = ckpt.restore_sharded(base, t1, process_index=1)
+    assert r0["w"].sum() == 0 and r1["w"].sum() == 3
+    with pytest.raises(ValueError):
+        ckpt.restore_sharded(base, t0, process_index=2)
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    base = str(tmp_path / "ck")
+    ckpt.save_sharded(base, tree(), step=3)
+    # step 7: manifest written (pidx 0) but shard 1 of 2 missing
+    ckpt.save_sharded(base, tree(), step=7, process_index=0, process_count=2)
+    assert ckpt.latest_step(base) == 3
+    _, _, manifest = ckpt.restore_sharded(base, tree())
+    assert manifest["step"] == 3
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_sharded(str(tmp_path / "empty"), tree())
+
+
+def test_async_sharded_checkpointer(tmp_path):
+    base = str(tmp_path / "ck")
+    with ckpt.AsyncCheckpointer(base, sharded=True) as saver:
+        saver.save(tree(), step=2, pipeline_state={"global_step": 2})
+        saver.save(tree(), step=4)
+        saver.wait()
+    assert saver.n_saved == 2
+    assert ckpt.latest_step(base) == 4
+    _, pstate, _ = ckpt.restore_sharded(base, tree(), step=2)
+    assert pstate == {"global_step": 2}
+    _, pstate4, _ = ckpt.restore_sharded(base, tree(), step=4)
+    assert pstate4 is None
+
+
+# ---------------------------------------------------------------------------
+# bit-exact resume through the TrainLoop
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("resume")
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=64),
+                              vocab_size=512, max_position=SEQ)
+
+    def work(batch, rng):
+        toks = batch["tokens"]
+        return {"tokens": toks, "labels": np.roll(toks, -1, axis=1),
+                "loss_mask": batch["attn_mask"]}
+
+    def make_pipe():
+        return DataPipeline.build(str(tmp / "data"), n_functions=150,
+                                  seq_len=SEQ, batch_size=B, vocab_size=512,
+                                  max_merges=60, n_workers=2, seed=3,
+                                  work_fn=work)
+
+    model = build_model(cfg)
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", SEQ, B, "train"),
+                    sharding="ddp", param_dtype="float32",
+                    activation_dtype="float32")
+
+    def make_runner():
+        opt = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=STEPS)
+        return StepRunner(model, run, opt, make_host_mesh())
+
+    return {"tmp": tmp, "make_pipe": make_pipe, "make_runner": make_runner}
+
+
+@pytest.mark.slow
+def test_resume_replays_uninterrupted_run_exactly(setup):
+    make_pipe, make_runner = setup["make_pipe"], setup["make_runner"]
+
+    p = make_pipe()
+    _, log_a = TrainLoop(make_runner(), log_every=1).run(p, STEPS, seed=0)
+    p.close()
+    losses_a = [m["loss"] for m in log_a.metrics]
+    assert len(losses_a) == STEPS
+
+    ck = str(setup["tmp"] / "ck")
+    p = make_pipe()
+    state, log_b1 = TrainLoop(make_runner(), log_every=1, ckpt_dir=ck,
+                              ckpt_every=3).run(p, 3, seed=0)
+    p.close()
+    del state  # "the process died here"
+
+    p2 = make_pipe()
+    r2 = make_runner()
+    state, start = resume(ck, r2, pipeline=p2)
+    assert start == 3 and p2.start_step == 3
+    _, log_b2 = TrainLoop(r2, log_every=1, ckpt_dir=ck).run(
+        p2, STEPS, state=state, start_step=start)
+    p2.close()
+
+    losses_b = [m["loss"] for m in log_b1.metrics] \
+        + [m["loss"] for m in log_b2.metrics]
+    steps_b = log_b1.steps + log_b2.steps
+    assert steps_b == log_a.steps
+    assert losses_b == losses_a, (losses_a, losses_b)
+
+
+@pytest.mark.slow
+def test_noop_resume_does_not_rewrite_checkpoint(setup):
+    """Resuming with start_step >= steps must not relabel the restored
+    state as a different (earlier) step's checkpoint."""
+    make_pipe, make_runner = setup["make_pipe"], setup["make_runner"]
+    ck = str(setup["tmp"] / "ck_noop")
+    p = make_pipe()
+    state, _ = TrainLoop(make_runner(), log_every=1, ckpt_dir=ck).run(
+        p, 4, seed=0)
+    p.close()
+    assert ckpt.latest_step(ck) == 4
+    before = sorted(os.listdir(ck))
+    p2 = make_pipe()
+    r2 = make_runner()
+    state, start = resume(ck, r2, pipeline=p2)
+    _, log = TrainLoop(r2, log_every=1, ckpt_dir=ck).run(
+        p2, 2, state=state, start_step=start)  # steps already done
+    p2.close()
+    assert log.steps == [] and sorted(os.listdir(ck)) == before
+
+
+@pytest.mark.slow
+def test_resumed_pipeline_serves_the_next_batch(setup):
+    """The batch consumed at resumed step s equals the batch the
+    uninterrupted run consumed at step s (not off by prefetch depth)."""
+    make_pipe = setup["make_pipe"]
+    p = make_pipe()
+    want = [p._batch(k)["tokens"] for k in range(5)]
+    p.close()
+    q = make_pipe().restore(make_pipe().state_at(3))
+    it = q.host_batches()
+    np.testing.assert_array_equal(next(it)["tokens"], want[3])
+    np.testing.assert_array_equal(next(it)["tokens"], want[4])
+    q.close()
