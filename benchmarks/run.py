@@ -10,6 +10,10 @@ CSV rows (derived = the claim-relevant figure of merit).
   mlm_train_step         measured train-step time of the paper's model (CPU)
   train_overlap          dispatch-stall fraction: seed-style blocking loop
                          vs the sharding-aware async StepRunner/TrainLoop
+  grad_overlap           ddp gradient sync on an 8-device CPU mesh:
+                         bucketed/backward-overlapped psum vs the fused
+                         tail all-reduce — step time, dispatch stall, and
+                         grad equivalence (microbatches 1 and 4)
   data_pipeline          deterministic pipeline vs seed loader throughput,
                          per-host shard disjointness, resume overhead
   kernel_*               Pallas kernels (interpret mode) vs jnp oracle
@@ -266,6 +270,143 @@ def bench_train_overlap(tmp):
         t["stall_fraction"], seed_stall)
 
 
+def _grad_overlap_worker():
+    """Runs in a subprocess with 8 virtual CPU devices (the parent sets
+    XLA_FLAGS); prints one JSON line.  Compares the ParallelPlan's two ddp
+    grad-sync strategies on identical model/batches:
+
+      fused_tail — ``ddp_overlap=False``: the pjit path, one partitioner-
+                   scheduled all-reduce after the full backward
+      bucketed   — the shard_map step, one psum per reverse-layer bucket
+
+    and checks the bucketed gradients against the single-device fused
+    reference (rtol 1e-6 at per-leaf scale, 1e-8 absolute floor for
+    f32 reduction-order noise) for microbatches 1 and 4.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.distributed.sharding import ParallelPlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.runner import StepRunner, TrainLoop
+    from repro.train.train_step import init_state, make_grad_fn
+
+    # B=32 over 8 dp shards: local batch 4 — divisible by both microbatch
+    # counts below (the bucketed path splits the LOCAL shard)
+    B, S, STEPS = 32, 64, 24
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=128),
+                              vocab_size=512, max_position=S)
+    model = build_model(cfg)
+    mesh = make_host_mesh(8)
+    opt = AdamWConfig(total_steps=STEPS)
+    out = {"equiv": {}}
+
+    def batches(seed=0):
+        rng = np.random.default_rng(seed)
+        while True:
+            toks = rng.integers(4, cfg.vocab_size, (B, S)).astype(np.int32)
+            yield {"tokens": toks, "labels": toks,
+                   "loss_mask": np.ones((B, S), np.float32)}
+
+    # -- gradient equivalence --------------------------------------------
+    for n_micro in (1, 4):
+        run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                        sharding="ddp", param_dtype="float32",
+                        activation_dtype="float32", microbatch=n_micro)
+        params = init_state(model, jax.random.PRNGKey(0), run)["params"]
+        batch = {k: jnp.asarray(v) for k, v in next(batches(7)).items()}
+        _, gref, mref = jax.jit(make_grad_fn(model, run))(params, batch)
+        plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25)
+        assert plan.grad_sync == "bucketed_overlap", plan.describe()
+        _, gb, mb = jax.jit(make_grad_fn(model, run, mesh, plan))(
+            params, batch)
+        worst = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(gref),
+                        jax.tree_util.tree_leaves(gb)):
+            a, b = np.asarray(a), np.asarray(b)
+            tol = 1e-6 * max(float(np.abs(a).max()), 1.0) + 1e-8
+            worst = max(worst, float(np.abs(a - b).max()) / tol)
+        out["equiv"][str(n_micro)] = {
+            "worst_err_over_tol": worst,
+            "loss_match": abs(float(mref["loss"]) - float(mb["loss"]))
+                          <= 1e-6 * abs(float(mref["loss"])),
+        }
+
+    # -- step time + dispatch stall --------------------------------------
+    run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                    sharding="ddp", param_dtype="float32",
+                    activation_dtype="float32")
+
+    def measure(ddp_overlap):
+        plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25,
+                                    ddp_overlap=ddp_overlap)
+        runner = StepRunner(model, run, opt, mesh, plan=plan)
+        TrainLoop(runner, log_every=8).run(batches(1), 3)  # warm compile
+        _, log = TrainLoop(runner, log_every=8).run(batches(2), STEPS)
+        t = log.telemetry
+        return {"stall": t["stall_fraction"],
+                "step_ms": t["step_time_ema"] * 1e3,
+                "tokens_per_s": t["tokens_per_s"],
+                "n_buckets": t["grad_buckets"],
+                "comm_mb": t["grad_comm_bytes"] / 1e6,
+                "wire_mb": t["grad_wire_bytes_per_device"] / 1e6}
+
+    out["fused"] = measure(False)
+    out["bucketed"] = measure(True)
+    print(json.dumps(out))
+
+
+def bench_grad_overlap():
+    import subprocess
+    import sys as _sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [_sys.executable, os.path.abspath(__file__),
+         "--grad-overlap-worker"],
+        env=env, capture_output=True, text=True, timeout=900)
+    us = (time.perf_counter() - t0) * 1e6
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    f, b = out["fused"], out["bucketed"]
+    emit(name="grad_overlap_step", us=us,
+         derived=(f"step_fused={f['step_ms']:.1f}ms_bucketed="
+                  f"{b['step_ms']:.1f}ms_buckets={b['n_buckets']}"
+                  f"_comm={b['comm_mb']:.2f}MB_wire="
+                  f"{b['wire_mb']:.2f}MB/dev"))
+    emit(name="grad_overlap_stall", us=0,
+         derived=(f"stall_fused={f['stall']:.3f}_stall_bucketed="
+                  f"{b['stall']:.3f}"))
+    e1, e4 = out["equiv"]["1"], out["equiv"]["4"]
+    emit(name="grad_overlap_equiv", us=0,
+         derived=(f"err_over_tol_micro1={e1['worst_err_over_tol']:.2f}"
+                  f"_micro4={e4['worst_err_over_tol']:.2f}"
+                  f"_loss_match={e1['loss_match'] and e4['loss_match']}"))
+    for e in (e1, e4):
+        assert e["worst_err_over_tol"] <= 1.0 and e["loss_match"], (
+            "bucketed ddp grads must match the fused reference", out)
+    # 0.05 absolute slack: CPU wall-clock noise on an all-virtual mesh
+    assert b["stall"] <= f["stall"] + 0.05, (
+        "bucketed-overlap dispatch stall must not exceed the fused-tail "
+        "baseline", out)
+
+
 def bench_data_pipeline(tmp):
     """Deterministic pipeline vs the seed sampling loader.
 
@@ -409,6 +550,9 @@ def bench_roofline_table():
 
 def main() -> None:
     argv = sys.argv[1:]
+    if "--grad-overlap-worker" in argv:
+        _grad_overlap_worker()
+        return
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
@@ -438,6 +582,8 @@ def main() -> None:
     if want("train_overlap"):
         with tempfile.TemporaryDirectory() as tmp:
             bench_train_overlap(tmp)
+    if want("grad_overlap"):
+        bench_grad_overlap()
     if want("data_pipeline"):
         with tempfile.TemporaryDirectory() as tmp:
             bench_data_pipeline(tmp)

@@ -55,6 +55,20 @@ DEFAULT_MICROBATCH = {
 }
 
 
+def default_run_config(cfg: ModelConfig, shape: ShapeConfig, *,
+                       sharding: str = "ddp", **kw) -> RunConfig:
+    """CPU-friendly f32 RunConfig shared by the launchers.
+
+    ``launch/train.py`` and ``launch/serve.py`` used to each spell out
+    ``RunConfig(..., sharding="ddp", param_dtype="float32",
+    activation_dtype="float32")`` and had started to drift; this is the
+    single source of those defaults.  Extra RunConfig fields pass through
+    ``**kw``."""
+    return RunConfig(model=cfg, shape=shape, sharding=sharding,
+                     param_dtype="float32", activation_dtype="float32",
+                     **kw)
+
+
 def get_config(arch: str) -> ModelConfig:
     if arch not in ARCHS:
         raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")

@@ -1,24 +1,36 @@
 """Gradient accumulation: recovers the paper's global batch when R5's
 memory limit shrinks the per-device batch (microbatching over a lax.scan).
+
+Accumulation composes with data-parallel gradient sync through the
+``sync_grads`` hook: microbatch gradients are summed LOCALLY across the
+scan and the hook (e.g. ``gradsync.bucketed_psum`` under the ddp
+ParallelPlan) runs exactly once, on the final accumulated tree.  Syncing
+every microbatch — the classic ddp scaling bug — would multiply the
+communication volume by ``n_micro`` for bit-identical results.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 
-def accumulate_grads(loss_fn: Callable, params, batch, n_micro: int):
+def accumulate_grads(loss_fn: Callable, params, batch, n_micro: int,
+                     sync_grads: Optional[Callable] = None):
     """loss_fn(params, microbatch) -> (loss, metrics).
 
     Splits every leaf of ``batch`` along axis 0 into ``n_micro`` equal
     microbatches and averages (loss, grads, metrics) over them with a scan,
-    so peak activation memory is that of ONE microbatch.
+    so peak activation memory is that of ONE microbatch.  ``sync_grads``
+    (when given) is applied once to the averaged gradient tree — i.e. on
+    the final microbatch only, never inside the scan.
     """
     if n_micro <= 1:
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch)
+        if sync_grads is not None:
+            grads = sync_grads(grads)
         return loss, grads, metrics
 
     def split(x):
@@ -50,4 +62,6 @@ def accumulate_grads(loss_fn: Callable, params, batch, n_micro: int):
     scale = 1.0 / n_micro
     grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
     metrics = jax.tree_util.tree_map(lambda m: m * scale, metrics)
+    if sync_grads is not None:
+        grads = sync_grads(grads)
     return loss * scale, grads, metrics

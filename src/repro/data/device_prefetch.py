@@ -16,6 +16,27 @@ from typing import Any, Dict, Iterable, Iterator, Optional
 import jax
 
 
+def place_on(value, sharding):
+    """Put ``value`` onto ``sharding``.
+
+    Single-controller (the sharding's devices are all addressable):
+    plain async ``jax.device_put``.  Multi-controller (the sharding
+    spans other processes' devices — the ``jax.distributed`` launch
+    path): ``value`` is this process's slice of the global batch (the
+    DataPipeline hands every host its own disjoint rows), so the global
+    array is assembled from the process-local rows instead; a direct
+    device_put onto a non-fully-addressable sharding is an error.
+    """
+    if sharding is None:
+        return jax.device_put(value)
+    if getattr(sharding, "is_fully_addressable", True):
+        return jax.device_put(value, sharding)
+    import numpy as np
+
+    return jax.make_array_from_process_local_data(
+        sharding, np.asarray(value))
+
+
 class DevicePrefetch:
     """Wrap a host-batch iterator; yield device-resident batches.
 
@@ -38,11 +59,8 @@ class DevicePrefetch:
         self.puts = 0           # batches dispatched to the device
 
     def _put(self, batch: Dict[str, Any]) -> Dict[str, Any]:
-        out = {}
-        for k, v in batch.items():
-            sh = self.shardings.get(k)
-            out[k] = jax.device_put(v, sh) if sh is not None \
-                else jax.device_put(v)
+        out = {k: place_on(v, self.shardings.get(k))
+               for k, v in batch.items()}
         self.puts += 1
         return out
 

@@ -1,1 +1,60 @@
-from repro.distributed import sharding  # noqa: F401
+"""Distributed execution: sharding rules, the ParallelPlan, gradient
+synchronization, and multi-controller runtime wiring."""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.distributed import gradsync, sharding  # noqa: F401
+from repro.distributed.sharding import ParallelPlan  # noqa: F401
+
+# env keys consulted by maybe_initialize_distributed, in priority order;
+# the JAX_* spellings match jax.distributed's own documented variables.
+_COORD_KEYS = ("REPRO_COORDINATOR", "JAX_COORDINATOR_ADDRESS")
+_NPROC_KEYS = ("REPRO_NUM_PROCESSES", "JAX_NUM_PROCESSES")
+_PID_KEYS = ("REPRO_PROCESS_ID", "JAX_PROCESS_ID")
+
+_initialized = False
+
+
+def _env(keys) -> Optional[str]:
+    for k in keys:
+        v = os.environ.get(k)
+        if v:
+            return v
+    return None
+
+
+def maybe_initialize_distributed() -> bool:
+    """Env-keyed ``jax.distributed.initialize()`` for real multi-controller
+    runs; a no-op for single-process work.
+
+    Initializes exactly when a coordinator address is present in the
+    environment (``REPRO_COORDINATOR`` or ``JAX_COORDINATOR_ADDRESS``,
+    plus ``*_NUM_PROCESSES`` / ``*_PROCESS_ID``) — the shape a launcher
+    like SLURM/k8s exports.  With no coordinator configured, nothing is
+    touched: ``jax.process_count()`` stays 1 and every downstream layer
+    (data pipeline host slices, sharded checkpoints, the ParallelPlan)
+    keys off that as before.  Returns True when initialize() was called.
+
+    Idempotent: a second call (e.g. launcher + library both defensive)
+    is a no-op.
+    """
+    global _initialized
+    if _initialized:
+        return False
+    coord = _env(_COORD_KEYS)
+    if coord is None:
+        return False
+    import jax
+
+    nproc = _env(_NPROC_KEYS)
+    pid = _env(_PID_KEYS)
+    kw = {"coordinator_address": coord}
+    if nproc is not None:
+        kw["num_processes"] = int(nproc)
+    if pid is not None:
+        kw["process_id"] = int(pid)
+    jax.distributed.initialize(**kw)
+    _initialized = True
+    return True

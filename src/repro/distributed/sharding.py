@@ -15,7 +15,8 @@ for e.g. kv_heads=8 on a model axis of 16 (falls back to head_dim).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -399,3 +400,179 @@ def cache_seq_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
 
 def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
     return batch_axes(mesh, global_batch, "fsdp")
+
+
+# ---------------------------------------------------------------------------
+# ParallelPlan — the one queryable description of a parallelism mode
+# ---------------------------------------------------------------------------
+
+# grad-sync strategies (ParallelPlan.grad_sync):
+#   bucketed_overlap — explicit per-bucket psum inside a shard_map'd step,
+#                      issued as cotangents become ready (ddp, dp>1)
+#   xla_fused        — the partitioner inserts collectives from the sharded
+#                      param/grad specs (fsdp/tp/fsdp_tp: grads are sharded,
+#                      there is no replicated tree to bucket)
+#   none             — single data-parallel shard: nothing to synchronize
+GRAD_SYNC_BUCKETED = "bucketed_overlap"
+GRAD_SYNC_XLA = "xla_fused"
+GRAD_SYNC_NONE = "none"
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """Unified, queryable parallelism plan for one (mesh, mode) pair.
+
+    The seed scattered mode-string dispatch (``run.sharding in (...)``)
+    across five files; the plan centralizes every question those call
+    sites asked:
+
+    * which mesh axes shard the batch (``dp_axes`` / ``batch_spec``),
+    * which logical-axis rules shard params (``rules`` /
+      ``tree_shardings``),
+    * whether/how gradients are synchronized (``grad_sync`` — see the
+      strategy constants above) and at what bucket granularity,
+    * how activations between blocks are constrained
+      (``activation_constrain``).
+
+    Construct via :meth:`make` (or ``for_run``); the dataclass is frozen
+    so a plan can be closed over by traced functions.
+    """
+
+    mode: str                      # ddp | fsdp | tp | fsdp_tp
+    mesh: Optional[Mesh] = None
+    global_batch: int = 0
+    grad_bucket_mb: float = 25.0
+    ddp_overlap: bool = True       # False forces the fused-tail baseline
+    microbatch: int = 1            # grad-accumulation count (ddp splits
+                                   # the LOCAL shard into microbatches)
+    has_moe: bool = False          # MoE aux loss needs global-batch
+                                   # router statistics: see grad_sync
+    _dp_axes: Tuple[str, ...] = field(default=())
+
+    @classmethod
+    def make(cls, mesh: Optional[Mesh], mode: str, global_batch: int, *,
+             grad_bucket_mb: float = 25.0, ddp_overlap: bool = True,
+             microbatch: int = 1, has_moe: bool = False) -> "ParallelPlan":
+        if mode not in RULES:
+            raise KeyError(f"unknown sharding mode {mode!r}; "
+                           f"known: {sorted(RULES)}")
+        dp = batch_axes(mesh, global_batch, mode) if mesh is not None \
+            else ()
+        return cls(mode=mode, mesh=mesh, global_batch=global_batch,
+                   grad_bucket_mb=grad_bucket_mb, ddp_overlap=ddp_overlap,
+                   microbatch=max(1, microbatch), has_moe=has_moe,
+                   _dp_axes=dp)
+
+    @classmethod
+    def for_run(cls, run, mesh: Optional[Mesh], *,
+                grad_bucket_mb: float = 25.0,
+                ddp_overlap: bool = True) -> "ParallelPlan":
+        return cls.make(mesh, run.sharding, run.shape.global_batch,
+                        grad_bucket_mb=grad_bucket_mb,
+                        ddp_overlap=ddp_overlap,
+                        microbatch=run.microbatch or 1,
+                        has_moe=run.model.moe is not None)
+
+    # -- axes ------------------------------------------------------------
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the batch is sharded over."""
+        return self._dp_axes
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self._dp_axes])) \
+            if self._dp_axes else 1
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        """The tensor-parallel axis, when this mode uses one."""
+        if self.mesh is not None and self.mode in ("tp", "fsdp_tp") \
+                and "model" in self.mesh.axis_names:
+            return "model"
+        return None
+
+    # -- specs -----------------------------------------------------------
+    @property
+    def rules(self) -> Dict[str, Tuple[Candidate, ...]]:
+        return RULES[self.mode]
+
+    def batch_spec(self, ndim: int = 2) -> P:
+        if self.mesh is None:
+            return P(*([None] * ndim))
+        return batch_spec(self.mesh, self.global_batch, self.mode, ndim)
+
+    def tree_shardings(self, axes_tree, shape_tree,
+                       drop_axes: Tuple[str, ...] = ()):
+        assert self.mesh is not None, "tree_shardings needs a mesh"
+        return tree_shardings(axes_tree, shape_tree, self.mesh, self.mode,
+                              drop_axes=drop_axes)
+
+    def activation_constrain(self, seq_axis: Optional[str] = None):
+        if self.mesh is None:
+            return None
+        return activation_sharding(self.mesh, self.global_batch, self.mode,
+                                   seq_axis=seq_axis)
+
+    # -- gradient synchronization ----------------------------------------
+    @property
+    def local_batch(self) -> int:
+        """Per-dp-shard batch rows inside the shard_map'd step."""
+        return self.global_batch // self.dp_size if self.dp_size else \
+            self.global_batch
+
+    @property
+    def grad_sync(self) -> str:
+        """Which strategy keeps data-parallel replicas in sync.
+
+        The bucketed path splits the LOCAL shard into microbatches (the
+        standard ddp accumulation semantics), so it requires
+        ``local_batch % microbatch == 0``; otherwise it falls back to the
+        partitioner-scheduled fused path rather than failing.  MoE models
+        also fall back: the Switch aux loss is a nonlinear function of
+        batch-mean router statistics, so computing it per shard would
+        change the load-balancing pressure from global to per-replica
+        (and break sum-of-local-grads == global-grad); the pjit path
+        computes it over the global batch."""
+        if self.mesh is None or self.dp_size <= 1:
+            return GRAD_SYNC_NONE
+        if self.mode == "ddp" and self.ddp_overlap and not self.has_moe \
+                and self.local_batch % self.microbatch == 0 \
+                and self.local_batch >= self.microbatch:
+            return GRAD_SYNC_BUCKETED
+        return GRAD_SYNC_XLA
+
+    def grad_buckets(self, abstract_params):
+        """Reverse-layer size-targeted buckets over the grad tree, or None
+        when this plan doesn't bucket (see :attr:`grad_sync`).
+
+        With accumulation (``microbatch > 1``) the synced gradients are
+        the f32 accumulators, not param-dtype arrays, so buckets are
+        sized — and comm telemetry reported — at f32 widths."""
+        if self.grad_sync != GRAD_SYNC_BUCKETED:
+            return None
+        import jax.numpy as jnp
+
+        from repro.distributed import gradsync
+
+        leaves = jax.tree_util.tree_leaves(abstract_params)
+        if self.microbatch > 1:
+            leaves = [jax.ShapeDtypeStruct(l.shape, jnp.float32)
+                      for l in leaves]
+        return gradsync.partition_buckets(
+            leaves, bucket_mb=self.grad_bucket_mb)
+
+    def describe(self) -> Dict[str, Any]:
+        """Flat summary for logs / telemetry."""
+        return {
+            "mode": self.mode,
+            "dp_axes": list(self._dp_axes),
+            "dp_size": self.dp_size,
+            "local_batch": self.local_batch,
+            "microbatch": self.microbatch,
+            "model_axis": self.model_axis,
+            "grad_sync": self.grad_sync,
+            "grad_bucket_mb": self.grad_bucket_mb,
+        }

@@ -22,8 +22,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    from repro.configs import get_config, reduced as reduce_cfg
-    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.configs import default_run_config, get_config, \
+        reduced as reduce_cfg
+    from repro.configs.base import ShapeConfig
     from repro.models import build_model
     from repro.serve.engine import ServeEngine
 
@@ -32,11 +33,8 @@ def main():
         cfg = reduce_cfg(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    run = RunConfig(model=cfg,
-                    shape=ShapeConfig("serve", args.prompt_len, args.batch,
-                                      "decode"),
-                    sharding="ddp", param_dtype="float32",
-                    activation_dtype="float32")
+    run = default_run_config(cfg, ShapeConfig("serve", args.prompt_len,
+                                              args.batch, "decode"))
     eng = ServeEngine(model, run)
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 4,

@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch bert-mlm-120m \
       --steps 200 --batch 16 --seq 128 [--reduced] [--workers 2] \
-      [--ckpt-dir runs/ck --ckpt-every 50] [--resume]
+      [--ckpt-dir runs/ck --ckpt-every 50 --keep-last-k 3] [--resume]
 
 Runs the paper's full pipeline on whatever devices exist, now through the
 deterministic ``DataPipeline``: synthesize a binary-function corpus,
@@ -10,11 +10,19 @@ tokenize+pack it (R1), stage it node-locally (R2), auto-tune loader
 workers and device-prefetch depth off the runner's measured step time
 (R3), then pretrain with the sharding-aware async StepRunner/TrainLoop.
 ``--ckpt-dir`` writes resumable per-process shard checkpoints
-(``ckpt-<step>/shard-<pidx>.npz`` + manifest) and ``--resume`` continues
-bit-exact from the newest complete one — same step, same next batch,
-same loss trajectory.  ``--process-index/--process-count`` set this
-host's slice of the deterministic global batch order (under
-``jax.distributed`` they default from the runtime).
+(``ckpt-<step>/shard-<pidx>.npz`` + manifest; ``--keep-last-k`` prunes
+older committed ones) and ``--resume`` continues bit-exact from the
+newest complete one — or from ``--ckpt-step N`` — same step, same next
+batch, same loss trajectory.  ``--process-index/--process-count`` set
+this host's slice of the deterministic global batch order.
+
+Multi-controller runs: exporting ``REPRO_COORDINATOR`` (or
+``JAX_COORDINATOR_ADDRESS``) plus ``*_NUM_PROCESSES``/``*_PROCESS_ID``
+makes the launcher call ``jax.distributed.initialize()`` before any
+device query; with nothing exported it is a single-process no-op.  Under
+ddp on >1 data-parallel shards the runner's ParallelPlan routes the step
+onto the bucketed, backward-overlapped gradient sync
+(``--grad-bucket-mb`` sets the all-reduce bucket size).
 """
 from __future__ import annotations
 
@@ -54,19 +62,36 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="continue from the newest complete checkpoint "
                          "in --ckpt-dir")
+    ap.add_argument("--ckpt-step", type=int, default=None,
+                    help="with --resume: restore this exact step instead "
+                         "of the newest complete one")
+    ap.add_argument("--keep-last-k", type=int, default=0,
+                    help="prune committed checkpoints beyond the newest "
+                         "K after each save (0 = keep all)")
+    ap.add_argument("--grad-bucket-mb", type=float, default=25.0,
+                    help="ddp gradient all-reduce bucket size (MB); one "
+                         "collective per bucket, overlapped with backward")
     ap.add_argument("--process-index", type=int, default=None)
     ap.add_argument("--process-count", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
-    from repro.configs import get_config, reduced as reduce_cfg
-    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.configs import default_run_config, get_config, \
+        reduced as reduce_cfg
+    from repro.configs.base import ShapeConfig
     from repro.core.mlm import mask_tokens
     from repro.data import DataPipeline, NetworkFS
+    from repro.distributed import maybe_initialize_distributed
     from repro.launch.mesh import make_host_mesh
     from repro.models import build_model
     from repro.train.optimizer import AdamWConfig
     from repro.train.runner import StepRunner, TrainLoop, resume
+
+    # multi-controller wiring (env-keyed; single-process no-op) — must run
+    # before the first jax device/process query below
+    if maybe_initialize_distributed():
+        print(f"[dist] jax.distributed initialized: process "
+              f"{jax.process_index()}/{jax.process_count()}")
 
     pidx = args.process_index if args.process_index is not None \
         else jax.process_index()
@@ -107,26 +132,40 @@ def main():
           f"in {time.perf_counter() - t0:.2f}s")
 
     model = build_model(cfg)
-    run = RunConfig(model=cfg, shape=ShapeConfig("cli", args.seq, args.batch,
-                                                 "train"),
-                    sharding="ddp", param_dtype="float32",
-                    activation_dtype="float32")
+    # under a real jax.distributed launch every process cooperates in ONE
+    # SPMD computation, so the step sees the global batch (per-host rows
+    # are assembled by data.device_prefetch.place_on); the simulated
+    # multi-host path (--process-count without a coordinator) keeps each
+    # process training independently on its own slice, as before
+    gbatch = args.batch * jax.process_count()
+    run = default_run_config(cfg, ShapeConfig("cli", args.seq, gbatch,
+                                              "train"))
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
                       total_steps=args.steps)
 
-    # data-parallel host mesh over whatever devices exist: the runner jits
-    # ONCE with explicit state/batch shardings + donated state buffers
-    n_dev = len(jax.local_devices())
-    mesh = make_host_mesh(data=n_dev if args.batch % n_dev == 0 else 1)
-    runner = StepRunner(model, run, opt, mesh)
+    # data-parallel mesh over whatever devices exist (all processes' under
+    # jax.distributed): the runner jits ONCE with explicit state/batch
+    # shardings + donated state buffers, and its ParallelPlan picks the
+    # gradient-sync strategy (bucketed overlapped psum for multi-shard ddp)
+    n_dev = jax.device_count()
+    mesh = make_host_mesh(data=n_dev if gbatch % n_dev == 0 else 1)
+    runner = StepRunner(model, run, opt, mesh,
+                        grad_bucket_mb=args.grad_bucket_mb)
+    gs = runner.grad_sync_info()
+    print(f"[plan] mode={gs['mode']} dp_axes={gs['dp_axes']} "
+          f"dp_size={gs['dp_size']} grad_sync={gs['grad_sync']} "
+          f"buckets={gs['n_buckets']} "
+          f"comm={gs['comm_bytes']/1e6:.1f}MB/step")
 
     if args.workers == 0:
         # R3 end-to-end: measure the real compiled step time on a scratch
         # state (so the training trajectory — and resume determinism — is
         # untouched), then grow workers / prefetch depth until the
         # consumer stops stalling, and no more
+        from repro.data.device_prefetch import place_on
+
         scratch = runner.init_state(seed=123)
-        probe_batch = {k: jax.device_put(v, runner.batch_shardings.get(k))
+        probe_batch = {k: place_on(v, runner.batch_shardings.get(k))
                        for k, v in pipeline.peek_batch().items()}
         runner.compile(scratch, probe_batch)
         t0 = time.perf_counter()
@@ -147,13 +186,14 @@ def main():
             ap.error("--resume needs --ckpt-dir")
         from repro.train import checkpoint as ckpt
 
-        if ckpt.latest_step(args.ckpt_dir) is None:
+        if args.ckpt_step is None and ckpt.latest_step(args.ckpt_dir) is None:
             print(f"[resume] no complete checkpoint in {args.ckpt_dir}; "
                   "starting fresh")
         else:
             state, start_step = resume(args.ckpt_dir, runner,
                                        pipeline=pipeline,
-                                       process_index=pidx)
+                                       process_index=pidx,
+                                       step=args.ckpt_step)
             print(f"[resume] host {pidx} restored shard at step "
                   f"{start_step} from {args.ckpt_dir}")
 
@@ -161,6 +201,7 @@ def main():
                      ckpt_path=args.ckpt, ckpt_dir=args.ckpt_dir,
                      ckpt_every=args.ckpt_every
                      if (args.ckpt or args.ckpt_dir) else 0,
+                     keep_last_k=args.keep_last_k,
                      process_index=pidx, process_count=pcount)
     print(f"[train] {cfg.name}: {model.cfg.n_layers}L d={cfg.d_model} "
           f"on {n_dev} device(s), mesh {dict(mesh.shape)}, "
@@ -177,7 +218,9 @@ def main():
     print(f"[telemetry] step_ema={t['step_time_ema']*1e3:.1f}ms "
           f"tokens/s={t['tokens_per_s']:.0f} "
           f"host_stall={t['stall_fraction']*100:.1f}% "
-          f"compiles={t['n_traces']:.0f}")
+          f"compiles={t['n_traces']:.0f} "
+          f"grad_sync={t['grad_sync']}/{t['grad_buckets']}bkt/"
+          f"{t['grad_comm_bytes']/1e6:.1f}MB")
     print("[done]")
 
 

@@ -32,8 +32,9 @@ import json
 import os
 import queue
 import re
+import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -77,11 +78,14 @@ def _shard_name(process_index: int) -> str:
 
 def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
                  process_count: int = 1,
-                 pipeline_state: Optional[Dict[str, Any]] = None) -> str:
+                 pipeline_state: Optional[Dict[str, Any]] = None,
+                 keep_last_k: int = 0) -> str:
     """Write this process's shard of checkpoint ``step`` (see module
     docstring for the layout).  ``pipeline_state`` is the serialized
     ``DataPipeline.state_at(step)`` dict — the input-side half of the
-    resume.  Returns the step directory."""
+    resume.  With ``keep_last_k`` > 0, process 0 prunes older committed
+    checkpoints right after committing this one's manifest.  Returns the
+    step directory."""
     d = step_dir(base_dir, step)
     os.makedirs(d, exist_ok=True)
     flat = _flatten(tree)
@@ -106,7 +110,25 @@ def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
         with open(mp + ".tmp", "w") as f:
             json.dump(manifest, f)
         os.replace(mp + ".tmp", mp)
+        if keep_last_k > 0:
+            gc_checkpoints(base_dir, keep_last_k)
     return d
+
+
+def gc_checkpoints(base_dir: str, keep_last_k: int) -> List[int]:
+    """Prune committed ``ckpt-<step>/`` directories beyond the newest
+    ``keep_last_k``.  Only COMMITTED checkpoints (manifest + every shard
+    present) are counted or deleted: an in-flight step directory — e.g. a
+    concurrent save that hasn't written its manifest yet — is never
+    touched, so GC can run right after a manifest commit without racing
+    the next save.  Returns the pruned step numbers."""
+    if keep_last_k <= 0:
+        return []
+    steps = sorted(s for s, _ in _complete_steps(base_dir))
+    doomed = steps[:-keep_last_k]
+    for s in doomed:
+        shutil.rmtree(step_dir(base_dir, s), ignore_errors=True)
+    return doomed
 
 
 def _complete_steps(base_dir: str):
@@ -185,11 +207,12 @@ class AsyncCheckpointer:
 
     def __init__(self, path: str, max_pending: int = 2, *,
                  sharded: bool = False, process_index: int = 0,
-                 process_count: int = 1):
+                 process_count: int = 1, keep_last_k: int = 0):
         self.path = path
         self.sharded = sharded
         self.process_index = process_index
         self.process_count = process_count
+        self.keep_last_k = keep_last_k
         self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._err: Optional[BaseException] = None
         self.n_saved = 0
@@ -207,7 +230,8 @@ class AsyncCheckpointer:
                     save_sharded(self.path, host_tree, step=step,
                                  process_index=self.process_index,
                                  process_count=self.process_count,
-                                 pipeline_state=pstate)
+                                 pipeline_state=pstate,
+                                 keep_last_k=self.keep_last_k)
                 else:
                     save(self.path, host_tree, step=step)
                 self.n_saved += 1

@@ -112,11 +112,18 @@ class StepRunner:
 
     def __init__(self, model: Model, run: RunConfig, opt: AdamWConfig,
                  mesh=None, *, donate: bool = True,
-                 seq_axis: Optional[str] = None):
+                 seq_axis: Optional[str] = None,
+                 plan: Optional["ParallelPlan"] = None,
+                 grad_bucket_mb: float = 25.0):
+        from repro.distributed.sharding import ParallelPlan
+
         self.model, self.run, self.opt, self.mesh = model, run, opt, mesh
+        self.plan = plan if plan is not None else ParallelPlan.for_run(
+            run, mesh, grad_bucket_mb=grad_bucket_mb)
         self.donate = donate
         self.n_traces = 0
-        step = make_train_step(model, run, opt, mesh, seq_axis=seq_axis)
+        step = make_train_step(model, run, opt, mesh, seq_axis=seq_axis,
+                               plan=self.plan)
 
         def counted(state, batch):
             self.n_traces += 1  # trace-time side effect == compile count
@@ -195,6 +202,27 @@ class StepRunner:
             return self.compiled(state, batch)
         return self._get_jit(batch)(state, batch)
 
+    # -- gradient-sync telemetry -----------------------------------------
+    def grad_sync_info(self) -> Dict[str, Any]:
+        """The plan's grad-sync shape plus per-step communication volume:
+        strategy, bucket count, per-bucket payload bytes, and the ring
+        all-reduce wire bytes per device per step."""
+        from repro.distributed import gradsync
+
+        info = dict(self.plan.describe())
+        buckets = self.plan.grad_buckets(
+            self.model.abstract(jnp.dtype(self.run.param_dtype)))
+        if buckets is None:
+            info.update(n_buckets=0, comm_bytes=0, bucket_bytes=[],
+                        wire_bytes_per_device=0.0)
+            return info
+        stats = gradsync.bucket_plan_stats(buckets)
+        info.update(stats)
+        info["bucket_bytes"] = [b.nbytes for b in buckets]
+        info["wire_bytes_per_device"] = gradsync.ring_allreduce_bytes(
+            stats["comm_bytes"], self.plan.dp_size)
+        return info
+
     # -- cost / MFU ------------------------------------------------------
     def step_cost(self):
         """Per-device hlocost Cost of the compiled step (trip-count-aware
@@ -265,7 +293,7 @@ class TrainLoop:
 
     def __init__(self, runner: StepRunner, *, log_every: int = 10,
                  ckpt_path: Optional[str] = None, ckpt_every: int = 0,
-                 ckpt_dir: Optional[str] = None,
+                 ckpt_dir: Optional[str] = None, keep_last_k: int = 0,
                  process_index: int = 0, process_count: int = 1,
                  async_checkpoint: bool = True, device_prefetch: bool = True,
                  prefetch_size: int = 2, aot_compile: bool = True,
@@ -278,6 +306,7 @@ class TrainLoop:
         self.log_every = max(1, log_every)
         self.ckpt_path, self.ckpt_every = ckpt_path, ckpt_every
         self.ckpt_dir = ckpt_dir
+        self.keep_last_k = keep_last_k
         self.process_index = process_index
         self.process_count = process_count
         self.async_checkpoint = async_checkpoint
@@ -329,7 +358,8 @@ class TrainLoop:
             saver = ckpt.AsyncCheckpointer(
                 self.ckpt_dir, sharded=True,
                 process_index=self.process_index,
-                process_count=self.process_count)
+                process_count=self.process_count,
+                keep_last_k=self.keep_last_k)
         elif self.ckpt_path and self.async_checkpoint:
             saver = ckpt.AsyncCheckpointer(self.ckpt_path)
 
@@ -360,7 +390,8 @@ class TrainLoop:
                 ckpt.save_sharded(self.ckpt_dir, st, step=step_no,
                                   process_index=self.process_index,
                                   process_count=self.process_count,
-                                  pipeline_state=pstate)
+                                  pipeline_state=pstate,
+                                  keep_last_k=self.keep_last_k)
             else:
                 ckpt.save(self.ckpt_path, st, step=step_no)
 
@@ -437,6 +468,7 @@ class TrainLoop:
 
         total = time.perf_counter() - t_start
         n_steps = steps - start_step
+        gs = runner.grad_sync_info()
         log.telemetry = {
             "total_s": total,
             "host_blocked_s": blocked,
@@ -446,6 +478,13 @@ class TrainLoop:
                             / max(total, 1e-9),
             "n_traces": runner.n_traces,
             "forced_metric_resolves": async_metrics.forced_resolves,
+            # per-bucket comm volume rides with the MFU/stall telemetry so
+            # the grad_overlap benchmark (and operators) can attribute
+            # step-time differences to communication
+            "grad_sync": gs["grad_sync"],
+            "grad_buckets": gs["n_buckets"],
+            "grad_comm_bytes": gs["comm_bytes"],
+            "grad_wire_bytes_per_device": gs["wire_bytes_per_device"],
         }
         return state, log
 

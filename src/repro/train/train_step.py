@@ -3,6 +3,17 @@
 ``make_train_step`` returns a jit-able function with in/out shardings
 derived from the sharding rules (DESIGN.md §5); this is the function the
 multi-pod dry-run lowers and the trainer executes.
+
+Gradient synchronization is dispatched through the
+:class:`~repro.distributed.sharding.ParallelPlan`:
+
+* ``bucketed_overlap`` (ddp, dp>1) — the step runs inside ``shard_map``
+  with replicated params and dp-sharded batch; each device computes local
+  gradients (accumulated locally over microbatches) and
+  ``gradsync.bucketed_psum`` issues one collective per reverse-layer
+  bucket, so late-layer reduction overlaps early-layer backward.
+* ``xla_fused`` / ``none`` — the seed pjit path: the partitioner derives
+  any collectives from the param/grad shardings.
 """
 from __future__ import annotations
 
@@ -17,7 +28,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.accum import accumulate_grads
 from repro.core.mlm import lm_loss, mlm_loss
+from repro.distributed import gradsync
 from repro.distributed import sharding as shd
+from repro.distributed.sharding import GRAD_SYNC_BUCKETED, ParallelPlan
 from repro.models.attention import DistDecode
 from repro.models.model import Model
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -128,7 +141,22 @@ def build_attn_ctx(cfg, mesh, run: RunConfig, global_batch: int,
 
 
 def loss_for(model: Model, params, batch, *, run: RunConfig,
-             mesh: Optional[Mesh] = None, constrain=None, shard_ctx=None):
+             mesh: Optional[Mesh] = None, constrain=None, shard_ctx=None,
+             axis_names=None, dp_size: int = 1):
+    """Loss + metrics.  Two calling modes:
+
+    * Global (default): under pjit the reductions span the full batch —
+      XLA inserts whatever collectives the sharding implies.
+    * Per-shard (``axis_names`` set, inside ``shard_map``): the model runs
+      on this device's batch shard only.  The returned *loss* is this
+      shard's contribution ``local_nll / global_den + aux/dp_size``, built
+      so that a plain SUM of per-device gradients equals the global-batch
+      gradient exactly (the property ``gradsync.bucketed_psum`` relies
+      on).  Only the data-dependent denominator is psum'd on the
+      differentiated path; param-dependent cross-device reductions appear
+      solely in the (undifferentiated) metrics, where their transpose
+      never runs.  Metrics are globally reduced and replicated.
+    """
     cfg = model.cfg
     if shard_ctx is None and mesh is not None:
         shard_ctx = build_attn_ctx(cfg, mesh, run,
@@ -153,6 +181,19 @@ def loss_for(model: Model, params, batch, *, run: RunConfig,
                        n_shards)
     s_nll, s_acc, s_den = chunked_xent(params, h, labels, mask, cfg,
                                        chunk=c, use_pallas=run.use_pallas)
+    if axis_names is not None:
+        # global denominator: mask-only, so safe inside value_and_grad
+        # (its transpose never touches params)
+        g_den = jax.lax.psum(s_den, axis_names)
+        den = jnp.maximum(g_den, 1.0)
+        loss = s_nll / den + aux / dp_size
+        # metric reductions are dead-end branches for the cotangent
+        g_nll, g_acc, g_aux = jax.lax.psum((s_nll, s_acc, aux), axis_names)
+        xent = g_nll / den
+        metrics = {"xent": xent, "acc": g_acc / den, "tokens": g_den,
+                   "aux_loss": g_aux / dp_size,
+                   "loss": xent + g_aux / dp_size}
+        return loss, metrics
     den = jnp.maximum(s_den, 1.0)
     loss = s_nll / den
     metrics = {"xent": loss, "acc": s_acc / den, "tokens": s_den}
@@ -164,11 +205,19 @@ def loss_for(model: Model, params, batch, *, run: RunConfig,
 
 def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
                     mesh: Optional[Mesh] = None,
-                    seq_axis: Optional[str] = None) -> Callable:
+                    seq_axis: Optional[str] = None,
+                    plan: Optional[ParallelPlan] = None) -> Callable:
     """(state, batch) -> (state, metrics); state = {params, opt}.
 
     ``seq_axis='model'`` adds Megatron-style sequence parallelism to the
-    inter-block activation constraint (fsdp_tp training)."""
+    inter-block activation constraint (fsdp_tp training).  ``plan``
+    selects the gradient-sync strategy; by default it is derived from
+    (run, mesh), which routes multi-shard ddp onto the
+    bucketed/overlapped ``shard_map`` step."""
+    if plan is None:
+        plan = ParallelPlan.for_run(run, mesh)
+    if plan.grad_sync == GRAD_SYNC_BUCKETED:
+        return _make_overlap_ddp_step(model, run, opt, plan)
     constrain = None
     if mesh is not None:
         constrain = shd.activation_sharding(
@@ -187,6 +236,109 @@ def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
         return {"params": new_params, "opt": new_opt}, metrics
 
     return step
+
+
+def make_grad_fn(model: Model, run: RunConfig,
+                 mesh: Optional[Mesh] = None,
+                 plan: Optional[ParallelPlan] = None) -> Callable:
+    """(params, batch) -> (loss, grads, metrics) under the plan's
+    grad-sync strategy — the train step minus the optimizer update.
+
+    This is the surface the equivalence tests and the ``grad_overlap``
+    benchmark compare.  The bucketed path reproduces the fused reference
+    gradients to float tolerance when the microbatches carry equal loss
+    weight (always true for ``microbatch == 1``, and for any microbatch
+    count with a uniform ``loss_mask``).  With ``microbatch > 1`` AND a
+    ragged mask the two strategies partition rows into microbatches
+    differently (global contiguous chunks vs per-shard slices), so the
+    per-microbatch denominators — and therefore the 1/n-averaged
+    gradients — are different token-weighted estimators of the same
+    global batch; neither is "wrong", but they are not bitwise
+    comparable.
+    """
+    if plan is None:
+        plan = ParallelPlan.for_run(run, mesh)
+    if plan.grad_sync == GRAD_SYNC_BUCKETED:
+        accum, axis = _bucketed_accum(model, run, plan)
+
+        def body(params, batch):
+            loss, grads, metrics = accum(params, batch)
+            # the accumulated loss is this shard's contribution; the
+            # declared-replicated output must be the global value
+            return jax.lax.psum(loss, axis), grads, metrics
+
+        return shd.shard_map(
+            body, mesh=plan.mesh,
+            in_specs=(P(), _dp_batch_spec(plan)),
+            out_specs=(P(), P(), P()), check_vma=False)
+
+    def grad_fn(params, batch):
+        def loss_fn(p, b):
+            return loss_for(model, p, b, run=run, mesh=mesh)
+
+        return accumulate_grads(loss_fn, params, batch,
+                                run.microbatch or 1)
+
+    return grad_fn
+
+
+def _axis_arg(dp_axes: Tuple[str, ...]):
+    return dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+
+def _dp_batch_spec(plan: ParallelPlan) -> P:
+    """shard_map spec prefix for the batch dict: leading (batch) dim over
+    the dp axes, everything else replicated."""
+    return P(_axis_arg(plan.dp_axes))
+
+
+def _bucketed_accum(model: Model, run: RunConfig, plan: ParallelPlan):
+    """Shared core of the bucketed ddp paths (the train step and
+    ``make_grad_fn`` must never drift apart): per-shard loss -> local
+    microbatch accumulation -> one psum per reverse-layer bucket.
+    Returns ``(accum(params, local_batch) -> (loss, grads, metrics),
+    axis)``; ``accum`` must be called INSIDE shard_map over the plan's
+    mesh, and its loss is this shard's contribution (grads and metrics
+    are already globally reduced)."""
+    axis = _axis_arg(plan.dp_axes)
+    buckets = plan.grad_buckets(model.abstract(jnp.dtype(run.param_dtype)))
+
+    def accum(params, batch):
+        def loss_fn(p, b):
+            return loss_for(model, p, b, run=run, mesh=None,
+                            axis_names=axis, dp_size=plan.dp_size)
+
+        return accumulate_grads(
+            loss_fn, params, batch, run.microbatch or 1,
+            sync_grads=lambda g: gradsync.bucketed_psum(g, axis, buckets))
+
+    return accum, axis
+
+
+def _make_overlap_ddp_step(model: Model, run: RunConfig, opt: AdamWConfig,
+                           plan: ParallelPlan) -> Callable:
+    """The bucketed/backward-overlapped ddp train step.
+
+    The whole step — forward, backward, per-bucket psum, optimizer — runs
+    inside one ``shard_map``: params and optimizer state are replicated
+    (spec ``P()``), the batch is sharded over the plan's dp axes, and the
+    only cross-device traffic is ``len(buckets)`` all-reduces whose
+    operands become ready in reverse-layer order during backward.  Each
+    device then applies the identical synced gradient, keeping replicas
+    bit-equal without broadcasting parameters.
+    """
+    accum, _ = _bucketed_accum(model, run, plan)
+
+    def body(state, batch):
+        _, grads, metrics = accum(state["params"], batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"])
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return shd.shard_map(
+        body, mesh=plan.mesh, in_specs=(P(), _dp_batch_spec(plan)),
+        out_specs=(P(), P()), check_vma=False)
 
 
 # ---------------------------------------------------------------------------

@@ -1,25 +1,13 @@
 """Multi-device semantics (8 virtual CPU devices via subprocess, since the
 device count is locked at jax init): sharded train step == single-device,
 expert-parallel MoE == dense, distributed decode == local decode."""
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _subproc import run_py
 
 
 def _run(body: str):
-    code = textwrap.dedent(body)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+    return run_py(body, n_devices=8)
 
 
 @pytest.mark.slow

@@ -62,6 +62,48 @@ def test_each_process_owns_its_shard(tmp_path):
         ckpt.restore_sharded(base, t0, process_index=2)
 
 
+def test_gc_prunes_only_committed_checkpoints_beyond_k(tmp_path):
+    base = str(tmp_path / "ck")
+    for s in (2, 4, 6, 8):
+        ckpt.save_sharded(base, tree(), step=s)
+    # an UNcommitted dir (no manifest) older than everything: GC must
+    # neither count nor delete it
+    os.makedirs(ckpt.step_dir(base, 1))
+    removed = ckpt.gc_checkpoints(base, keep_last_k=2)
+    assert removed == [2, 4]
+    assert sorted(os.listdir(base)) == ["ckpt-00000001", "ckpt-00000006",
+                                        "ckpt-00000008"]
+    assert ckpt.latest_step(base) == 8
+    # idempotent; keep_last_k<=0 is a no-op
+    assert ckpt.gc_checkpoints(base, keep_last_k=2) == []
+    assert ckpt.gc_checkpoints(base, keep_last_k=0) == []
+
+
+def test_save_sharded_keep_last_k_prunes_after_commit(tmp_path):
+    base = str(tmp_path / "ck")
+    for s in (1, 2, 3):
+        ckpt.save_sharded(base, tree(), step=s, keep_last_k=2)
+    steps = [s for s, _ in
+             sorted((int(n.split("-")[1]), n) for n in os.listdir(base))]
+    assert steps == [2, 3]
+    # only process 0 (the manifest owner) prunes
+    ckpt.save_sharded(base, tree(), step=4, process_index=1,
+                      process_count=2, keep_last_k=1)
+    assert ckpt.step_dir(base, 2).split("/")[-1] in os.listdir(base)
+
+
+def test_resume_honors_explicit_ckpt_step(tmp_path):
+    base = str(tmp_path / "ck")
+    t5 = {"w": np.full(3, 5.0, np.float32)}
+    t9 = {"w": np.full(3, 9.0, np.float32)}
+    ckpt.save_sharded(base, t5, step=5)
+    ckpt.save_sharded(base, t9, step=9)
+    got, _, manifest = ckpt.restore_sharded(base, t5, step=5)
+    assert manifest["step"] == 5 and got["w"][0] == 5.0
+    got, _, manifest = ckpt.restore_sharded(base, t5)  # default: newest
+    assert manifest["step"] == 9 and got["w"][0] == 9.0
+
+
 def test_incomplete_checkpoint_ignored(tmp_path):
     base = str(tmp_path / "ck")
     ckpt.save_sharded(base, tree(), step=3)
