@@ -14,6 +14,12 @@ CSV rows (derived = the claim-relevant figure of merit).
                          bucketed/backward-overlapped psum vs the fused
                          tail all-reduce — step time, dispatch stall, and
                          grad equivalence (microbatches 1 and 4)
+  fsdp_overlap           fsdp (ZeRO-3) on an 8-device CPU mesh: the
+                         scatter_overlap step (per-bucket all_gather
+                         prefetch + psum_scatter) vs the XLA-fused fsdp
+                         baseline — grad equivalence, 20-step loss
+                         trajectory, per-bucket comm bytes, and the ~2x
+                         gradient wire-byte drop vs the ddp all-reduce
   data_pipeline          deterministic pipeline vs seed loader throughput,
                          per-host shard disjointness, resume overhead
   kernel_*               Pallas kernels (interpret mode) vs jnp oracle
@@ -275,7 +281,7 @@ def _grad_overlap_worker():
     XLA_FLAGS); prints one JSON line.  Compares the ParallelPlan's two ddp
     grad-sync strategies on identical model/batches:
 
-      fused_tail — ``ddp_overlap=False``: the pjit path, one partitioner-
+      fused_tail — ``overlap=False``: the pjit path, one partitioner-
                    scheduled all-reduce after the full backward
       bucketed   — the shard_map step, one psum per reverse-layer bucket
 
@@ -345,9 +351,9 @@ def _grad_overlap_worker():
                     sharding="ddp", param_dtype="float32",
                     activation_dtype="float32")
 
-    def measure(ddp_overlap):
+    def measure(overlap):
         plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25,
-                                    ddp_overlap=ddp_overlap)
+                                    overlap=overlap)
         runner = StepRunner(model, run, opt, mesh, plan=plan)
         TrainLoop(runner, log_every=8).run(batches(1), 3)  # warm compile
         _, log = TrainLoop(runner, log_every=8).run(batches(2), STEPS)
@@ -404,6 +410,167 @@ def bench_grad_overlap():
     # 0.05 absolute slack: CPU wall-clock noise on an all-virtual mesh
     assert b["stall"] <= f["stall"] + 0.05, (
         "bucketed-overlap dispatch stall must not exceed the fused-tail "
+        "baseline", out)
+
+
+def _fsdp_overlap_worker():
+    """Runs in a subprocess with 8 virtual CPU devices; prints one JSON
+    line.  Compares the ParallelPlan's two fsdp grad-sync strategies on
+    identical model/batches:
+
+      fused   — ``overlap=False``: the pjit path; the partitioner derives
+                collectives from the embed-rule param shardings
+      scatter — ``scatter_overlap``: params + optimizer state sharded
+                over "data"; the shard_map step all_gathers each param
+                bucket in forward order and psum_scatters each grad
+                bucket in reverse order
+
+    Checks (same tolerances as grad_overlap): scatter gradients vs the
+    single-device fused reference for microbatches 1 and 4, and a
+    20-step loss trajectory vs the XLA-fused fsdp runner.  Also reports
+    per-bucket comm bytes and the gradient wire-byte ratio vs a ddp ring
+    all-reduce of the same payload (reduce-scatter alone is the
+    reduce-scatter half: ~0.5x).
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.distributed import gradsync
+    from repro.distributed.sharding import ParallelPlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.runner import StepRunner, TrainLoop
+    from repro.train.train_step import init_state, make_grad_fn
+
+    B, S, STEPS = 32, 64, 20
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=128),
+                              vocab_size=512, max_position=S)
+    model = build_model(cfg)
+    mesh = make_host_mesh(8)
+    opt = AdamWConfig(total_steps=STEPS)
+    out = {"equiv": {}}
+
+    def batches(seed=0):
+        rng = np.random.default_rng(seed)
+        while True:
+            toks = rng.integers(4, cfg.vocab_size, (B, S)).astype(np.int32)
+            yield {"tokens": toks, "labels": toks,
+                   "loss_mask": np.ones((B, S), np.float32)}
+
+    # -- gradient equivalence --------------------------------------------
+    for n_micro in (1, 4):
+        run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                        sharding="fsdp", param_dtype="float32",
+                        activation_dtype="float32", microbatch=n_micro)
+        params = init_state(model, jax.random.PRNGKey(0), run)["params"]
+        batch = {k: jnp.asarray(v) for k, v in next(batches(7)).items()}
+        _, gref, mref = jax.jit(make_grad_fn(model, run))(params, batch)
+        plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25)
+        assert plan.grad_sync == "scatter_overlap", plan.describe()
+        _, gs_, ms_ = jax.jit(make_grad_fn(model, run, mesh, plan))(
+            params, batch)
+        worst = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(gref),
+                        jax.tree_util.tree_leaves(gs_)):
+            a, b = np.asarray(a), np.asarray(b)
+            tol = 1e-6 * max(float(np.abs(a).max()), 1.0) + 1e-8
+            worst = max(worst, float(np.abs(a - b).max()) / tol)
+        out["equiv"][str(n_micro)] = {
+            "worst_err_over_tol": worst,
+            "loss_match": abs(float(mref["loss"]) - float(ms_["loss"]))
+                          <= 1e-6 * abs(float(mref["loss"])),
+        }
+
+    # -- 20-step loss trajectory + step time / stall ---------------------
+    run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                    sharding="fsdp", param_dtype="float32",
+                    activation_dtype="float32")
+
+    def measure(overlap):
+        plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25,
+                                    overlap=overlap)
+        runner = StepRunner(model, run, opt, mesh, plan=plan)
+        TrainLoop(runner, log_every=8).run(batches(1), 3)  # warm compile
+        _, log = TrainLoop(runner, log_every=1).run(batches(2), STEPS)
+        t = log.telemetry
+        return {"stall": t["stall_fraction"],
+                "step_ms": t["step_time_ema"] * 1e3,
+                "tokens_per_s": t["tokens_per_s"],
+                "n_buckets": t["grad_buckets"],
+                "comm_mb": t["grad_comm_bytes"] / 1e6,
+                "wire_mb": t["grad_wire_bytes_per_device"] / 1e6,
+                "gather_mb": t["param_gather_bytes"] / 1e6,
+                "losses": [m["loss"] for m in log.metrics]}
+
+    out["fused"] = measure(False)
+    out["scatter"] = measure(True)
+
+    # gradient wire bytes vs a ddp ring all-reduce of the same payload
+    info = StepRunner(model, run, opt, mesh,
+                      plan=ParallelPlan.for_run(
+                          run, mesh, grad_bucket_mb=0.25)).grad_sync_info()
+    ddp_wire = gradsync.ring_allreduce_bytes(info["comm_bytes"], 8)
+    out["wire_ratio_vs_ddp"] = info["wire_bytes_per_device"] / ddp_wire
+    print(json.dumps(out))
+
+
+def bench_fsdp_overlap():
+    import subprocess
+    import sys as _sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [_sys.executable, os.path.abspath(__file__),
+         "--fsdp-overlap-worker"],
+        env=env, capture_output=True, text=True, timeout=900)
+    us = (time.perf_counter() - t0) * 1e6
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    f, s = out["fused"], out["scatter"]
+    emit(name="fsdp_overlap_step", us=us,
+         derived=(f"step_fused={f['step_ms']:.1f}ms_scatter="
+                  f"{s['step_ms']:.1f}ms_buckets={s['n_buckets']}"
+                  f"_comm={s['comm_mb']:.2f}MB_wire={s['wire_mb']:.2f}"
+                  f"MB/dev_gather={s['gather_mb']:.2f}MB"))
+    emit(name="fsdp_overlap_stall", us=0,
+         derived=(f"stall_fused={f['stall']:.3f}_stall_scatter="
+                  f"{s['stall']:.3f}"))
+    e1, e4 = out["equiv"]["1"], out["equiv"]["4"]
+    traj = max(abs(a - b) / max(abs(a), 1e-9)
+               for a, b in zip(f["losses"], s["losses"]))
+    emit(name="fsdp_overlap_equiv", us=0,
+         derived=(f"err_over_tol_micro1={e1['worst_err_over_tol']:.2f}"
+                  f"_micro4={e4['worst_err_over_tol']:.2f}"
+                  f"_traj_rel={traj:.1e}"
+                  f"_wire_vs_ddp={out['wire_ratio_vs_ddp']:.2f}x"))
+    for e in (e1, e4):
+        assert e["worst_err_over_tol"] <= 1.0 and e["loss_match"], (
+            "scatter fsdp grads must match the fused reference", out)
+    assert len(f["losses"]) == len(s["losses"]) == 20
+    # per-step losses drift by fp reduction-order noise only; 1e-5
+    # relative bounds 20 steps of f32 Adam on matching gradients
+    assert traj <= 1e-5, ("scatter fsdp loss trajectory must match the "
+                          "XLA-fused baseline", out)
+    # reduce-scatter alone is half a ring all-reduce; a small replicated
+    # (psum) remainder can nudge the ratio above exactly 0.5
+    assert out["wire_ratio_vs_ddp"] <= 0.6, out
+    assert s["stall"] <= f["stall"] + 0.05, (
+        "scatter-overlap dispatch stall must not exceed the fused fsdp "
         "baseline", out)
 
 
@@ -553,6 +720,9 @@ def main() -> None:
     if "--grad-overlap-worker" in argv:
         _grad_overlap_worker()
         return
+    if "--fsdp-overlap-worker" in argv:
+        _fsdp_overlap_worker()
+        return
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
@@ -584,6 +754,8 @@ def main() -> None:
             bench_train_overlap(tmp)
     if want("grad_overlap"):
         bench_grad_overlap()
+    if want("fsdp_overlap"):
+        bench_fsdp_overlap()
     if want("data_pipeline"):
         with tempfile.TemporaryDirectory() as tmp:
             bench_data_pipeline(tmp)

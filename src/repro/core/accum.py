@@ -3,10 +3,20 @@ memory limit shrinks the per-device batch (microbatching over a lax.scan).
 
 Accumulation composes with data-parallel gradient sync through the
 ``sync_grads`` hook: microbatch gradients are summed LOCALLY across the
-scan and the hook (e.g. ``gradsync.bucketed_psum`` under the ddp
-ParallelPlan) runs exactly once, on the final accumulated tree.  Syncing
-every microbatch — the classic ddp scaling bug — would multiply the
-communication volume by ``n_micro`` for bit-identical results.
+scan — no cross-device traffic inside the loop — and the hook runs
+exactly once, on the final accumulated tree.  Syncing every microbatch —
+the classic ddp scaling bug — would multiply the communication volume by
+``n_micro`` for bit-identical results.  Two hooks exist today:
+
+* ``gradsync.bucketed_psum`` (ddp ``bucketed_overlap``): per-bucket
+  all-reduce; the returned tree keeps the accumulator's leaf shapes.
+* ``gradsync.bucketed_psum_scatter`` (fsdp ``scatter_overlap``):
+  per-bucket reduce-scatter; the returned tree carries SHARD-shaped
+  leaves for dp-divisible params (the layout the sharded optimizer
+  update consumes).  The accumulator itself stays full-size f32 per
+  device — "local" means no per-microbatch collective, not a sharded
+  accumulator; scattering inside the scan would trade that memory for
+  ``n_micro``x the wire volume.
 """
 from __future__ import annotations
 
@@ -24,7 +34,9 @@ def accumulate_grads(loss_fn: Callable, params, batch, n_micro: int,
     microbatches and averages (loss, grads, metrics) over them with a scan,
     so peak activation memory is that of ONE microbatch.  ``sync_grads``
     (when given) is applied once to the averaged gradient tree — i.e. on
-    the final microbatch only, never inside the scan.
+    the final microbatch only, never inside the scan.  The hook may
+    return a tree with different leaf SHAPES (the fsdp scatter hook
+    returns per-device shards); structure must be preserved.
     """
     if n_micro <= 1:
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(

@@ -1,26 +1,42 @@
-"""Bucketed, backward-overlapped gradient synchronization (ddp).
+"""Bucketed, backward-overlapped gradient synchronization (ddp + fsdp).
 
 The paper's central scaling lesson is that data parallelism only stays
 near-linear while gradient communication hides behind backward compute.
-The seed ddp path left synchronization implicit: XLA sees the full grad
-tree feed the optimizer and schedules whatever all-reduce shape it likes —
-in practice one fused tail collective after the entire backward, so the
+The seed left synchronization implicit: XLA sees the full grad tree feed
+the optimizer and schedules whatever collective shape it likes — in
+practice one fused tail collective after the entire backward, so the
 network sits idle during backward and the compute sits idle during the
 reduction.
 
-This module makes the sync explicit and overlappable:
+This module makes the sync explicit and overlappable, for both
+data-parallel strategies (see ``docs/parallelism.md``; axis-name
+conventions — ``pod``/``data``/``model`` — are defined once in
+``repro.distributed.sharding``):
 
 * :func:`partition_buckets` slices the flat grad leaf list into
   size-targeted buckets (~25MB by default, the knee of the
   latency/bandwidth trade-off on both NCCL and ICI fabrics) in
   **reverse-layer order** — the order backward produces cotangents — so
-  the last layers' bucket is ready first and its all-reduce overlaps the
+  the last layers' bucket is ready first and its collective overlaps the
   earlier layers' backward compute.
-* :func:`bucketed_psum` issues exactly ONE ``psum`` per bucket (leaves are
-  flattened and concatenated into a single 1-D buffer per dtype, so the
-  collective count is a guarantee, not an XLA-combiner heuristic).  Each
-  bucket's collective depends only on its own cotangents, which is what
-  lets the latency-hiding scheduler start it mid-backward.
+* :func:`bucketed_psum` (ddp, ``bucketed_overlap``) issues exactly ONE
+  ``psum`` per bucket (leaves are flattened and concatenated into a
+  single 1-D buffer per dtype, so the collective count is a guarantee,
+  not an XLA-combiner heuristic).  Each bucket's collective depends only
+  on its own cotangents, which is what lets the latency-hiding scheduler
+  start it mid-backward.
+* :func:`partition_fsdp_buckets` / :func:`gather_fsdp_params` /
+  :func:`bucketed_psum_scatter` (fsdp, ``scatter_overlap``) decompose the
+  all-reduce into its two halves and move them where they overlap: one
+  ``all_gather`` per bucket rebuilds full parameters from the per-device
+  shards at the START of the step (issued in forward-layer order, each
+  depending only on its own shard — the prefetch handle: layer N's
+  gather can run under layer N-1's matmuls), and one ``psum_scatter``
+  per bucket reduces gradients straight back to shards during backward
+  (reverse-layer order).  Each device then updates only its 1/n slice of
+  params and optimizer state (ZeRO-3).  Wire bytes for the *gradient*
+  half drop 2x vs the ddp ring all-reduce — the scatter is the
+  reduce-scatter phase alone — while the gather half rides in forward.
 
 The train step runs the whole thing inside a ``shard_map`` (see
 ``train/train_step.py``), where collectives are explicit primitives
@@ -40,6 +56,15 @@ from typing import Any, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+__all__ = [
+    "DEFAULT_BUCKET_MB", "GradBucket", "FsdpBucketPlan",
+    "partition_buckets", "partition_fsdp_buckets", "shard_dim",
+    "bucketed_psum", "fused_psum",
+    "gather_fsdp_params", "bucketed_psum_scatter", "fsdp_global_norm",
+    "bucket_plan_stats", "ring_allreduce_bytes",
+    "reduce_scatter_bytes", "all_gather_bytes", "leaf_nbytes",
+]
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -64,7 +89,8 @@ class GradBucket:
         return self.nbytes / 1e6
 
 
-def _leaf_nbytes(leaf) -> int:
+def leaf_nbytes(leaf) -> int:
+    """Payload bytes of one leaf (array or ShapeDtypeStruct)."""
     return int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
 
 
@@ -103,7 +129,7 @@ def partition_buckets(leaves: Sequence[Any], *,
         cur, cur_bytes, cur_dtype = [], 0, None
 
     for i in order:
-        nb = _leaf_nbytes(leaves[i])
+        nb = leaf_nbytes(leaves[i])
         dt = jnp.dtype(leaves[i].dtype)
         if cur and (cur_dtype != dt or cur_bytes + nb > target):
             close()
@@ -149,6 +175,210 @@ def fused_psum(grads, axis_names: AxisNames):
     return bucketed_psum(grads, axis_names, bucket)
 
 
+# ---------------------------------------------------------------------------
+# fsdp (ZeRO-3): sharded params, per-bucket all_gather / psum_scatter
+# ---------------------------------------------------------------------------
+
+
+def shard_dim(leaf, n_shards: int) -> Optional[int]:
+    """The dimension a leaf is sharded over under ``scatter_overlap``:
+    the FIRST dim divisible by ``n_shards``, or None (replicated).
+
+    Dim 0 is preferred but not required — scan-stacked block params carry
+    a small leading ``repeats`` dim (often 1), so insisting on dim 0
+    would leave every block weight replicated.  A leaf with no divisible
+    dim (scalars, odd-sized biases) stays replicated and its gradient
+    joins a plain-psum bucket instead.
+    """
+    if n_shards <= 1:
+        return None
+    for d, s in enumerate(leaf.shape):
+        if s > 0 and s % n_shards == 0:
+            return d
+    return None
+
+
+def local_shape(shape: Sequence[int], dim: int, n_shards: int
+                ) -> Tuple[int, ...]:
+    """Per-device shard shape of a leaf sharded on ``dim``."""
+    shape = tuple(shape)
+    return shape[:dim] + (shape[dim] // n_shards,) + shape[dim + 1:]
+
+
+@dataclass(frozen=True)
+class FsdpBucketPlan:
+    """Communication plan for the ``scatter_overlap`` (fsdp) strategy.
+
+    ``scatter`` buckets hold shardable leaves: forward issues one
+    ``all_gather`` per bucket (full params from shards), backward one
+    ``psum_scatter`` (summed grad shards from full local grads).
+    ``psum`` buckets hold the un-shardable remainder, synchronized with a
+    plain ddp-style all-reduce.  ``shard_dims[i]`` is the sharded dim of
+    flat leaf ``i`` (None = replicated); bucket ``indices`` refer to the
+    same flat leaf order as :class:`GradBucket`.
+    """
+
+    n_shards: int
+    scatter: Tuple[GradBucket, ...]
+    psum: Tuple[GradBucket, ...]
+    shard_dims: Tuple[Optional[int], ...]
+
+    @property
+    def buckets(self) -> Tuple[GradBucket, ...]:
+        """All buckets, scatter first (telemetry convenience)."""
+        return self.scatter + self.psum
+
+    @property
+    def scatter_indices(self) -> Tuple[int, ...]:
+        return tuple(i for b in self.scatter for i in b.indices)
+
+    @property
+    def scatter_bytes(self) -> int:
+        return sum(b.nbytes for b in self.scatter)
+
+    @property
+    def psum_bytes(self) -> int:
+        return sum(b.nbytes for b in self.psum)
+
+
+def _remap(bucket: GradBucket, orig: Sequence[int]) -> GradBucket:
+    return GradBucket(tuple(orig[i] for i in bucket.indices),
+                      bucket.nbytes, bucket.dtype)
+
+
+def partition_fsdp_buckets(leaves: Sequence[Any], n_shards: int, *,
+                           bucket_mb: float = DEFAULT_BUCKET_MB
+                           ) -> FsdpBucketPlan:
+    """Split grad leaves into scatter vs psum buckets for fsdp.
+
+    Shardable leaves (see :func:`shard_dim`) and the replicated remainder
+    are bucketed independently — a scatter bucket must be wholly
+    shardable so its flat buffer splits into ``n_shards`` equal chunks
+    with no padding (each member leaf's size divides by ``n_shards``).
+    Both groups keep the reverse-layer walk of :func:`partition_buckets`.
+    """
+    dims = tuple(shard_dim(l, n_shards) for l in leaves)
+    sc = [i for i, d in enumerate(dims) if d is not None]
+    rp = [i for i, d in enumerate(dims) if d is None]
+    scatter = tuple(
+        _remap(b, sc) for b in partition_buckets(
+            [leaves[i] for i in sc], bucket_mb=bucket_mb)) if sc else ()
+    psum = tuple(
+        _remap(b, rp) for b in partition_buckets(
+            [leaves[i] for i in rp], bucket_mb=bucket_mb)) if rp else ()
+    return FsdpBucketPlan(n_shards, scatter, psum, dims)
+
+
+def _leaf_to_blocks(full, dim: int, n: int):
+    """(n, size/n) view of a full leaf: row d is shard d's slice along
+    ``dim``, raveled — the layout ``psum_scatter(tiled=True)`` scatters
+    by leading chunk."""
+    s = full.shape
+    sz = s[dim] // n
+    x = full.reshape(s[:dim] + (n, sz) + s[dim + 1:])
+    return jnp.moveaxis(x, dim, 0).reshape(n, -1)
+
+
+def _blocks_to_leaf(blocks, loc_shape: Tuple[int, ...], dim: int, n: int):
+    """Inverse of :func:`_leaf_to_blocks`: (n, size/n) gathered rows back
+    to the full leaf (concatenating device blocks along ``dim``)."""
+    x = blocks.reshape((n,) + tuple(loc_shape))
+    x = jnp.moveaxis(x, 0, dim)
+    return x.reshape(loc_shape[:dim] + (n * loc_shape[dim],)
+                     + loc_shape[dim + 1:])
+
+
+def gather_fsdp_params(local_params, axis_names: AxisNames,
+                       plan: FsdpBucketPlan):
+    """Rebuild full parameters from per-device shards with one
+    ``all_gather`` per scatter bucket.
+
+    Must run inside ``shard_map``.  Buckets are walked in FORWARD layer
+    order (the reverse of their backward-ordered construction), and each
+    gather depends only on its own bucket's shards — so the scheduler can
+    prefetch layer N's bucket while layer N-1's matmuls run.  Replicated
+    leaves pass through untouched.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(local_params)
+    out = list(leaves)
+    n = plan.n_shards
+    for b in reversed(plan.scatter):
+        parts = [leaves[i] for i in b.indices]
+        flat = jnp.concatenate([p.reshape(-1) for p in parts])
+        with jax.named_scope(f"fsdp_gather_{b.mb:.1f}mb"):
+            g = jax.lax.all_gather(flat, axis_names)  # (n, local_len)
+        off = 0
+        for i, p in zip(b.indices, parts):
+            loc = int(np.prod(p.shape))
+            out[i] = _blocks_to_leaf(g[:, off:off + loc], p.shape,
+                                     plan.shard_dims[i], n)
+            off += loc
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def bucketed_psum_scatter(grads, axis_names: AxisNames,
+                          plan: FsdpBucketPlan):
+    """Reduce full local grads to summed per-device shards: one
+    ``psum_scatter`` per scatter bucket (wire bytes: the reduce-scatter
+    phase of a ring all-reduce alone — half the ddp volume), plus one
+    plain ``psum`` per replicated-remainder bucket.
+
+    Must run inside ``shard_map``.  Each scatter depends only on its own
+    bucket's cotangents, which become ready in reverse-layer order during
+    backward — the same overlap handle as :func:`bucketed_psum`.  The
+    returned tree has SHARD-shaped leaves for scatterable indices and
+    full (synced) leaves for the remainder — aligned with the
+    ``scatter_overlap`` state layout the optimizer updates.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = list(leaves)
+    n = plan.n_shards
+    for b in plan.scatter:
+        parts = [leaves[i] for i in b.indices]
+        blocks = jnp.concatenate(
+            [_leaf_to_blocks(p, plan.shard_dims[i], n)
+             for i, p in zip(b.indices, parts)], axis=1)
+        with jax.named_scope(f"fsdp_scatter_{b.mb:.1f}mb"):
+            red = jax.lax.psum_scatter(blocks.reshape(-1), axis_names,
+                                       scatter_dimension=0, tiled=True)
+        off = 0
+        for i, p in zip(b.indices, parts):
+            loc_s = local_shape(p.shape, plan.shard_dims[i], n)
+            loc = int(np.prod(loc_s))
+            out[i] = red[off:off + loc].reshape(loc_s)
+            off += loc
+    for b in plan.psum:
+        parts = [leaves[i] for i in b.indices]
+        flat = jnp.concatenate([p.reshape(-1) for p in parts])
+        with jax.named_scope(f"gradsync_bucket_{b.mb:.1f}mb"):
+            flat = jax.lax.psum(flat, axis_names)
+        off = 0
+        for i, p in zip(b.indices, parts):
+            loc = int(np.prod(p.shape))
+            out[i] = flat[off:off + loc].reshape(p.shape)
+            off += loc
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fsdp_global_norm(grads, axis_names: AxisNames,
+                     plan: FsdpBucketPlan) -> jnp.ndarray:
+    """Global L2 norm of a grad tree in the ``scatter_overlap`` layout.
+
+    Scatterable leaves are disjoint shards — their squared sums add up
+    across devices via ``psum`` — while replicated leaves are identical
+    everywhere and must be counted exactly once (outside the psum).
+    Matches the fused path's ``_global_norm`` to reduction-order noise.
+    """
+    leaves = jax.tree_util.tree_leaves(grads)
+    sc = set(plan.scatter_indices)
+    sq = lambda x: jnp.sum(jnp.square(x.astype(jnp.float32)))
+    sq_shard = sum((sq(l) for i, l in enumerate(leaves) if i in sc),
+                   jnp.zeros((), jnp.float32))
+    sq_rep = sum((sq(l) for i, l in enumerate(leaves) if i not in sc),
+                 jnp.zeros((), jnp.float32))
+    return jnp.sqrt(jax.lax.psum(sq_shard, axis_names) + sq_rep)
+
+
 def bucket_plan_stats(buckets: Sequence[GradBucket]) -> dict:
     """Telemetry summary: collective count + payload distribution."""
     if not buckets:
@@ -169,3 +399,22 @@ def ring_allreduce_bytes(total_bytes: int, n_devices: int) -> float:
     if n_devices <= 1:
         return 0.0
     return 2.0 * (n_devices - 1) / n_devices * total_bytes
+
+
+def reduce_scatter_bytes(total_bytes: int, n_devices: int) -> float:
+    """Wire bytes per device for a ring reduce-scatter of
+    ``total_bytes``: (n-1)/n * payload — HALF the all-reduce, which is
+    why ``scatter_overlap`` halves the per-step gradient wire volume vs
+    ddp (the matching all-gather moved onto the *parameters*, in
+    forward, where it overlaps compute)."""
+    if n_devices <= 1:
+        return 0.0
+    return (n_devices - 1) / n_devices * total_bytes
+
+
+def all_gather_bytes(total_bytes: int, n_devices: int) -> float:
+    """Wire bytes per device for a ring all-gather assembling
+    ``total_bytes``: (n-1)/n * payload."""
+    if n_devices <= 1:
+        return 0.0
+    return (n_devices - 1) / n_devices * total_bytes

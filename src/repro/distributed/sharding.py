@@ -1,10 +1,20 @@
-"""Logical-axis -> mesh-axis sharding rules.
+"""Logical-axis -> mesh-axis sharding rules, and the ParallelPlan.
 
-Modes (DESIGN.md §5):
+**Mesh-axis naming convention** (stated once here; every other module —
+``gradsync``, ``train/runner``, the launchers — uses these names):
+
+  ``pod``    leading DCN axis of a multi-pod mesh; pure data parallelism.
+  ``data``   the data-parallel / ZeRO axis inside a pod: batches shard
+             over it in every mode, params + optimizer state shard over
+             it under fsdp (``scatter_overlap``).
+  ``model``  the tensor-parallel axis (Megatron-style): heads/ff/vocab/
+             expert dims shard over it under tp / fsdp_tp.
+
+Modes (DESIGN.md §5; full treatment in ``docs/parallelism.md``):
   ddp      — paper-faithful pure data parallelism: params replicated,
              batch sharded over every available mesh axis.
   fsdp     — params (and optimizer state) sharded over "data" (ZeRO-3
-             analogue); batch over ("pod","data") [+ "model" if free].
+             analogue); batch over ("pod","data").
   tp       — Megatron-style tensor parallelism over "model" (serving).
   fsdp_tp  — both (default for >=7B training).
 
@@ -22,6 +32,18 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParallelPlan",
+    "GRAD_SYNC_BUCKETED", "GRAD_SYNC_SCATTER", "GRAD_SYNC_XLA",
+    "GRAD_SYNC_NONE",
+    "RULES", "spec_for", "tree_shardings", "batch_axes", "batch_spec",
+    "activation_sharding", "shard_map", "optimization_barrier",
+    "local_batch_size", "process_batch_slice",
+    "flash_attn_ctx", "flash_shard_shapes", "flash_analytic_cost",
+    "ssd_analytic_cost", "attn_shard_ctx",
+    "cache_rules", "cache_seq_axes", "cache_batch_axes",
+]
 
 Candidate = Union[str, Tuple[str, ...]]
 
@@ -54,6 +76,9 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
 
 @jax.custom_jvp
 def optimization_barrier(operands):
+    """Differentiable ``jax.lax.optimization_barrier``: identity with a
+    custom_jvp passthrough (see the block comment above), so train steps
+    that pin scheduling with it stay reverse-differentiable."""
     return jax.lax.optimization_barrier(operands)
 
 
@@ -123,6 +148,10 @@ def _cand_axes(cand: Candidate) -> Tuple[str, ...]:
 
 def spec_for(axes: Optional[Sequence[Optional[str]]], shape: Sequence[int],
              rules: Dict[str, Tuple[Candidate, ...]], mesh: Mesh) -> P:
+    """PartitionSpec for one tensor: each logical axis name in ``axes``
+    is resolved through ``rules`` to the first mesh axis that exists, is
+    unused by this tensor, and divides the dim — else replicated.
+    ``axes=None`` (no logical annotation) replicates the whole leaf."""
     if axes is None:
         return P()
     used: set = set()
@@ -184,6 +213,8 @@ def batch_axes(mesh: Mesh, global_batch: int, mode: str) -> Tuple[str, ...]:
 
 
 def batch_spec(mesh: Mesh, global_batch: int, mode: str, ndim: int = 2) -> P:
+    """PartitionSpec for a batch array: leading (batch) dim over the
+    mode's dp axes (see :func:`batch_axes`), trailing dims replicated."""
     ax = batch_axes(mesh, global_batch, mode)
     lead = ax if len(ax) != 1 else ax[0]
     return P(lead if ax else None, *([None] * (ndim - 1)))
@@ -392,6 +423,8 @@ def cache_rules(mesh: Mesh, global_batch: int, mode: str):
 
 
 def cache_seq_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Mesh axes the decode cache's sequence dim shards over (every axis
+    the batch can't use; see :func:`cache_rules`)."""
     bax = batch_axes(mesh, global_batch, "fsdp")
     if bax and "data" in bax:
         return ("model",)
@@ -399,6 +432,8 @@ def cache_seq_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
 
 
 def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Mesh axes the decode cache's batch dim shards over (the fsdp
+    (`pod`,`data`) prefix that divides the batch)."""
     return batch_axes(mesh, global_batch, "fsdp")
 
 
@@ -409,11 +444,18 @@ def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
 # grad-sync strategies (ParallelPlan.grad_sync):
 #   bucketed_overlap — explicit per-bucket psum inside a shard_map'd step,
 #                      issued as cotangents become ready (ddp, dp>1)
+#   scatter_overlap  — fsdp/fsdp_tp: params + optimizer state sharded over
+#                      the dp axes (ZeRO-3); the shard_map'd step issues
+#                      one all_gather per bucket in forward-layer order
+#                      (param prefetch) and one psum_scatter per bucket in
+#                      reverse-layer order during backward (grad wire
+#                      bytes halve vs the ddp all-reduce)
 #   xla_fused        — the partitioner inserts collectives from the sharded
-#                      param/grad specs (fsdp/tp/fsdp_tp: grads are sharded,
-#                      there is no replicated tree to bucket)
+#                      param/grad specs (tp, and every fallback: MoE,
+#                      indivisible microbatch, tp-sharded leaves)
 #   none             — single data-parallel shard: nothing to synchronize
 GRAD_SYNC_BUCKETED = "bucketed_overlap"
+GRAD_SYNC_SCATTER = "scatter_overlap"
 GRAD_SYNC_XLA = "xla_fused"
 GRAD_SYNC_NONE = "none"
 
@@ -442,34 +484,45 @@ class ParallelPlan:
     mesh: Optional[Mesh] = None
     global_batch: int = 0
     grad_bucket_mb: float = 25.0
-    ddp_overlap: bool = True       # False forces the fused-tail baseline
-    microbatch: int = 1            # grad-accumulation count (ddp splits
-                                   # the LOCAL shard into microbatches)
+    overlap: bool = True           # False forces the fused-tail baseline
+                                   # (xla_fused) for ddp AND fsdp modes
+    microbatch: int = 1            # grad-accumulation count (the overlap
+                                   # paths split the LOCAL shard into
+                                   # microbatches)
     has_moe: bool = False          # MoE aux loss needs global-batch
                                    # router statistics: see grad_sync
     _dp_axes: Tuple[str, ...] = field(default=())
 
     @classmethod
     def make(cls, mesh: Optional[Mesh], mode: str, global_batch: int, *,
-             grad_bucket_mb: float = 25.0, ddp_overlap: bool = True,
+             grad_bucket_mb: float = 25.0, overlap: bool = True,
              microbatch: int = 1, has_moe: bool = False) -> "ParallelPlan":
+        """Build a plan for one (mesh, mode, global_batch) triple.
+
+        ``overlap=False`` pins the fused ``xla_fused`` baseline (the knob
+        the grad_overlap/fsdp_overlap benchmarks flip); ``microbatch``
+        and ``has_moe`` feed the fallback predicate of
+        :attr:`grad_sync`.  Raises ``KeyError`` on an unknown mode.
+        """
         if mode not in RULES:
             raise KeyError(f"unknown sharding mode {mode!r}; "
                            f"known: {sorted(RULES)}")
         dp = batch_axes(mesh, global_batch, mode) if mesh is not None \
             else ()
         return cls(mode=mode, mesh=mesh, global_batch=global_batch,
-                   grad_bucket_mb=grad_bucket_mb, ddp_overlap=ddp_overlap,
+                   grad_bucket_mb=grad_bucket_mb, overlap=overlap,
                    microbatch=max(1, microbatch), has_moe=has_moe,
                    _dp_axes=dp)
 
     @classmethod
     def for_run(cls, run, mesh: Optional[Mesh], *,
                 grad_bucket_mb: float = 25.0,
-                ddp_overlap: bool = True) -> "ParallelPlan":
+                overlap: bool = True) -> "ParallelPlan":
+        """Plan derived from a ``RunConfig`` (mode, global batch,
+        microbatch count, MoE-ness all read off ``run``)."""
         return cls.make(mesh, run.sharding, run.shape.global_batch,
                         grad_bucket_mb=grad_bucket_mb,
-                        ddp_overlap=ddp_overlap,
+                        overlap=overlap,
                         microbatch=run.microbatch or 1,
                         has_moe=run.model.moe is not None)
 
@@ -524,25 +577,54 @@ class ParallelPlan:
             self.global_batch
 
     @property
+    def tp_sharded(self) -> bool:
+        """True when the tp rules actually shard leaves — i.e. the mesh
+        carries a ``model`` axis of size > 1 under a tp-carrying mode.
+        ``scatter_overlap`` cannot bucket tp-sharded leaves (their shards
+        live on the model axis, not the dp axes), so fsdp_tp falls back
+        to ``xla_fused`` in that case; on a model-axis-1 mesh the tp
+        specs are vacuous and the scatter path engages."""
+        return self.mode in ("tp", "fsdp_tp") and self.mesh is not None \
+            and "model" in getattr(self.mesh, "axis_names", ()) \
+            and self.mesh.shape["model"] > 1
+
+    @property
     def grad_sync(self) -> str:
         """Which strategy keeps data-parallel replicas in sync.
 
-        The bucketed path splits the LOCAL shard into microbatches (the
-        standard ddp accumulation semantics), so it requires
-        ``local_batch % microbatch == 0``; otherwise it falls back to the
-        partitioner-scheduled fused path rather than failing.  MoE models
-        also fall back: the Switch aux loss is a nonlinear function of
-        batch-mean router statistics, so computing it per shard would
-        change the load-balancing pressure from global to per-replica
-        (and break sum-of-local-grads == global-grad); the pjit path
-        computes it over the global batch."""
+        The overlap paths split the LOCAL shard into microbatches (the
+        standard ddp accumulation semantics), so they require
+        ``local_batch % microbatch == 0``; otherwise the plan falls back
+        to the partitioner-scheduled fused path rather than failing.  MoE
+        models also fall back: the Switch aux loss is a nonlinear
+        function of batch-mean router statistics, so computing it per
+        shard would change the load-balancing pressure from global to
+        per-replica (and break sum-of-local-grads == global-grad); the
+        pjit path computes it over the global batch.  fsdp_tp falls back
+        when :attr:`tp_sharded` (see there).  The full mode x condition
+        table lives in ``docs/parallelism.md`` and is asserted in
+        ``tests/test_gradsync.py``."""
         if self.mesh is None or self.dp_size <= 1:
             return GRAD_SYNC_NONE
-        if self.mode == "ddp" and self.ddp_overlap and not self.has_moe \
-                and self.local_batch % self.microbatch == 0 \
-                and self.local_batch >= self.microbatch:
-            return GRAD_SYNC_BUCKETED
+        divisible = self.local_batch % self.microbatch == 0 \
+            and self.local_batch >= self.microbatch
+        if self.overlap and not self.has_moe and divisible:
+            if self.mode == "ddp":
+                return GRAD_SYNC_BUCKETED
+            if self.mode in ("fsdp", "fsdp_tp") and not self.tp_sharded:
+                return GRAD_SYNC_SCATTER
         return GRAD_SYNC_XLA
+
+    def _grad_leaves(self, abstract_params):
+        """Grad-tree leaves at sync width: f32 accumulators when
+        ``microbatch > 1``, param dtype otherwise."""
+        import jax.numpy as jnp
+
+        leaves = jax.tree_util.tree_leaves(abstract_params)
+        if self.microbatch > 1:
+            leaves = [jax.ShapeDtypeStruct(l.shape, jnp.float32)
+                      for l in leaves]
+        return leaves
 
     def grad_buckets(self, abstract_params):
         """Reverse-layer size-targeted buckets over the grad tree, or None
@@ -553,16 +635,45 @@ class ParallelPlan:
         sized — and comm telemetry reported — at f32 widths."""
         if self.grad_sync != GRAD_SYNC_BUCKETED:
             return None
-        import jax.numpy as jnp
-
         from repro.distributed import gradsync
 
-        leaves = jax.tree_util.tree_leaves(abstract_params)
-        if self.microbatch > 1:
-            leaves = [jax.ShapeDtypeStruct(l.shape, jnp.float32)
-                      for l in leaves]
         return gradsync.partition_buckets(
-            leaves, bucket_mb=self.grad_bucket_mb)
+            self._grad_leaves(abstract_params),
+            bucket_mb=self.grad_bucket_mb)
+
+    def scatter_plan(self, abstract_params):
+        """The :class:`~repro.distributed.gradsync.FsdpBucketPlan` for a
+        ``scatter_overlap`` run (all_gather/psum_scatter bucket layout +
+        per-leaf shard dims), or None for every other strategy.  Sized at
+        grad width like :meth:`grad_buckets`."""
+        if self.grad_sync != GRAD_SYNC_SCATTER:
+            return None
+        from repro.distributed import gradsync
+
+        return gradsync.partition_fsdp_buckets(
+            self._grad_leaves(abstract_params), self.dp_size,
+            bucket_mb=self.grad_bucket_mb)
+
+    def scatter_param_specs(self, abstract_params):
+        """Per-leaf ``PartitionSpec`` tree for the ``scatter_overlap``
+        state layout: each leaf sharded over the dp axes on its
+        :func:`~repro.distributed.gradsync.shard_dim` (first dim the dp
+        size divides), replicated when no dim divides.  Used both as the
+        ``shard_map`` in/out specs of the scatter step and (as
+        ``NamedSharding``) for the runner's state placement — the two
+        must agree, which is why they share this one builder."""
+        from repro.distributed import gradsync
+
+        axis = self._dp_axes if len(self._dp_axes) > 1 else \
+            (self._dp_axes[0] if self._dp_axes else None)
+
+        def one(leaf):
+            d = gradsync.shard_dim(leaf, self.dp_size)
+            if d is None or axis is None:
+                return P()
+            return P(*([None] * d), axis)
+
+        return jax.tree_util.tree_map(one, abstract_params)
 
     def describe(self) -> Dict[str, Any]:
         """Flat summary for logs / telemetry."""

@@ -19,10 +19,18 @@ this host's slice of the deterministic global batch order.
 Multi-controller runs: exporting ``REPRO_COORDINATOR`` (or
 ``JAX_COORDINATOR_ADDRESS``) plus ``*_NUM_PROCESSES``/``*_PROCESS_ID``
 makes the launcher call ``jax.distributed.initialize()`` before any
-device query; with nothing exported it is a single-process no-op.  Under
-ddp on >1 data-parallel shards the runner's ParallelPlan routes the step
-onto the bucketed, backward-overlapped gradient sync
-(``--grad-bucket-mb`` sets the all-reduce bucket size).
+device query; with nothing exported it is a single-process no-op.
+
+On >1 data-parallel shards the runner's ParallelPlan routes the step
+onto an overlap-scheduled gradient sync (``--grad-bucket-mb`` sets the
+bucket size; docs/parallelism.md has the full strategy table):
+``--sharding ddp`` (default) gets the bucketed backward-overlapped
+all-reduce; ``--sharding fsdp`` gets scatter_overlap — params and
+optimizer state sharded over the dp axes, per-bucket all_gather
+prefetch in forward, per-bucket psum_scatter in backward.
+
+Resuming from a pinned ``--ckpt-step N`` protects checkpoint N from
+``--keep-last-k`` GC for the rest of the run (docs/resume.md).
 """
 from __future__ import annotations
 
@@ -68,9 +76,15 @@ def main():
     ap.add_argument("--keep-last-k", type=int, default=0,
                     help="prune committed checkpoints beyond the newest "
                          "K after each save (0 = keep all)")
+    ap.add_argument("--sharding", default="ddp",
+                    choices=["ddp", "fsdp", "tp", "fsdp_tp"],
+                    help="parallelism mode; ddp replicates params, fsdp "
+                         "shards params+optimizer over the data axis "
+                         "(scatter_overlap; see docs/parallelism.md)")
     ap.add_argument("--grad-bucket-mb", type=float, default=25.0,
-                    help="ddp gradient all-reduce bucket size (MB); one "
-                         "collective per bucket, overlapped with backward")
+                    help="gradient collective bucket size (MB); one "
+                         "psum (ddp) or psum_scatter+all_gather (fsdp) "
+                         "per bucket, overlapped with compute")
     ap.add_argument("--process-index", type=int, default=None)
     ap.add_argument("--process-count", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -139,7 +153,8 @@ def main():
     # process training independently on its own slice, as before
     gbatch = args.batch * jax.process_count()
     run = default_run_config(cfg, ShapeConfig("cli", args.seq, gbatch,
-                                              "train"))
+                                              "train"),
+                             sharding=args.sharding)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
                       total_steps=args.steps)
 
@@ -155,7 +170,9 @@ def main():
     print(f"[plan] mode={gs['mode']} dp_axes={gs['dp_axes']} "
           f"dp_size={gs['dp_size']} grad_sync={gs['grad_sync']} "
           f"buckets={gs['n_buckets']} "
-          f"comm={gs['comm_bytes']/1e6:.1f}MB/step")
+          f"comm={gs['comm_bytes']/1e6:.1f}MB/step "
+          f"wire={gs['wire_bytes_per_device']/1e6:.1f}MB/dev "
+          f"gather={gs['param_gather_bytes']/1e6:.1f}MB")
 
     if args.workers == 0:
         # R3 end-to-end: measure the real compiled step time on a scratch
@@ -197,11 +214,15 @@ def main():
             print(f"[resume] host {pidx} restored shard at step "
                   f"{start_step} from {args.ckpt_dir}")
 
+    # a pinned --ckpt-step is an operator decision (e.g. a rollback
+    # point): protect it from keep-last-k GC for the rest of this run
+    pins = (args.ckpt_step,) if (args.resume
+                                 and args.ckpt_step is not None) else ()
     loop = TrainLoop(runner, log_every=args.log_every,
                      ckpt_path=args.ckpt, ckpt_dir=args.ckpt_dir,
                      ckpt_every=args.ckpt_every
                      if (args.ckpt or args.ckpt_dir) else 0,
-                     keep_last_k=args.keep_last_k,
+                     keep_last_k=args.keep_last_k, pin_steps=pins,
                      process_index=pidx, process_count=pcount)
     print(f"[train] {cfg.name}: {model.cfg.n_layers}L d={cfg.d_model} "
           f"on {n_dev} device(s), mesh {dict(mesh.shape)}, "

@@ -40,13 +40,32 @@ import jax
 import numpy as np
 
 
+def _host_leaf(leaf) -> np.ndarray:
+    """Device->host copy of one state leaf.
+
+    Guard, not a capability: a leaf sharded across PROCESSES (real
+    multi-controller fsdp — params/moments split over a cross-host
+    'data' axis) cannot be fetched whole by one process, and np.asarray
+    would raise from deep inside the saver.  Until the shard layout
+    stores per-process sub-shards (ROADMAP), fail at the snapshot with
+    an actionable message instead.  Single-process meshes — however
+    many local devices — are always fully addressable."""
+    if not getattr(leaf, "is_fully_addressable", True):
+        raise NotImplementedError(
+            "checkpointing cross-process sharded state is not supported "
+            "yet: this leaf spans devices of other processes (e.g. "
+            "--sharding fsdp under a real jax.distributed launch). "
+            "See docs/resume.md.")
+    return np.asarray(leaf)
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path
         )
-        arr = np.asarray(leaf)
+        arr = _host_leaf(leaf)
         if arr.dtype.name == "bfloat16":  # npz has no bf16: lossless upcast
             arr = arr.astype(np.float32)
         flat[key] = arr
@@ -79,13 +98,15 @@ def _shard_name(process_index: int) -> str:
 def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
                  process_count: int = 1,
                  pipeline_state: Optional[Dict[str, Any]] = None,
-                 keep_last_k: int = 0) -> str:
+                 keep_last_k: int = 0,
+                 pin_steps: Tuple[int, ...] = ()) -> str:
     """Write this process's shard of checkpoint ``step`` (see module
     docstring for the layout).  ``pipeline_state`` is the serialized
     ``DataPipeline.state_at(step)`` dict — the input-side half of the
     resume.  With ``keep_last_k`` > 0, process 0 prunes older committed
-    checkpoints right after committing this one's manifest.  Returns the
-    step directory."""
+    checkpoints right after committing this one's manifest; steps listed
+    in ``pin_steps`` (e.g. the checkpoint a ``--ckpt-step`` resume was
+    restored from) are never pruned.  Returns the step directory."""
     d = step_dir(base_dir, step)
     os.makedirs(d, exist_ok=True)
     flat = _flatten(tree)
@@ -111,20 +132,28 @@ def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
             json.dump(manifest, f)
         os.replace(mp + ".tmp", mp)
         if keep_last_k > 0:
-            gc_checkpoints(base_dir, keep_last_k)
+            gc_checkpoints(base_dir, keep_last_k, protect=pin_steps)
     return d
 
 
-def gc_checkpoints(base_dir: str, keep_last_k: int) -> List[int]:
+def gc_checkpoints(base_dir: str, keep_last_k: int,
+                   protect: Tuple[int, ...] = ()) -> List[int]:
     """Prune committed ``ckpt-<step>/`` directories beyond the newest
     ``keep_last_k``.  Only COMMITTED checkpoints (manifest + every shard
     present) are counted or deleted: an in-flight step directory — e.g. a
     concurrent save that hasn't written its manifest yet — is never
     touched, so GC can run right after a manifest commit without racing
-    the next save.  Returns the pruned step numbers."""
+    the next save.  Steps in ``protect`` are exempt regardless of age —
+    a run resumed from a pinned ``--ckpt-step`` must never GC the
+    checkpoint it restored from (the operator pinned it for a reason,
+    e.g. a rollback point; docs/resume.md).  Protected steps do not
+    count toward the ``keep_last_k`` budget.  Returns the pruned step
+    numbers."""
     if keep_last_k <= 0:
         return []
-    steps = sorted(s for s, _ in _complete_steps(base_dir))
+    protected = set(protect)
+    steps = sorted(s for s, _ in _complete_steps(base_dir)
+                   if s not in protected)
     doomed = steps[:-keep_last_k]
     for s in doomed:
         shutil.rmtree(step_dir(base_dir, s), ignore_errors=True)
@@ -207,12 +236,14 @@ class AsyncCheckpointer:
 
     def __init__(self, path: str, max_pending: int = 2, *,
                  sharded: bool = False, process_index: int = 0,
-                 process_count: int = 1, keep_last_k: int = 0):
+                 process_count: int = 1, keep_last_k: int = 0,
+                 pin_steps: Tuple[int, ...] = ()):
         self.path = path
         self.sharded = sharded
         self.process_index = process_index
         self.process_count = process_count
         self.keep_last_k = keep_last_k
+        self.pin_steps = tuple(pin_steps)
         self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
         self._err: Optional[BaseException] = None
         self.n_saved = 0
@@ -231,7 +262,8 @@ class AsyncCheckpointer:
                                  process_index=self.process_index,
                                  process_count=self.process_count,
                                  pipeline_state=pstate,
-                                 keep_last_k=self.keep_last_k)
+                                 keep_last_k=self.keep_last_k,
+                                 pin_steps=self.pin_steps)
                 else:
                     save(self.path, host_tree, step=step)
                 self.n_saved += 1
@@ -253,7 +285,7 @@ class AsyncCheckpointer:
             raise ValueError("sharded saves need an explicit step")
         if pipeline_state is not None and hasattr(pipeline_state, "to_json"):
             pipeline_state = pipeline_state.to_json()
-        host = jax.tree_util.tree_map(np.asarray, tree)
+        host = jax.tree_util.tree_map(_host_leaf, tree)
         self._q.put((host, step, pipeline_state))
 
     def wait(self):

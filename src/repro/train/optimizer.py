@@ -49,10 +49,20 @@ def _global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(sq)
 
 
-def adamw_update(c: AdamWConfig, grads, opt_state, params
+def adamw_update(c: AdamWConfig, grads, opt_state, params, *,
+                 grad_norm=None
                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step; returns (new_params, new_opt_state, metrics).
+
+    The update is elementwise, so it runs unchanged on sharded leaves —
+    the fsdp ``scatter_overlap`` step calls it on per-device param/grad/
+    moment SHARDS.  The one cross-leaf quantity is the clipping norm:
+    pass ``grad_norm`` when the leaves don't span the whole gradient
+    (e.g. ``gradsync.fsdp_global_norm``, which psums shard contributions
+    across the dp axes); left None, it is the local ``_global_norm``.
+    """
     step = opt_state["step"]
-    gnorm = _global_norm(grads)
+    gnorm = grad_norm if grad_norm is not None else _global_norm(grads)
     scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9)) \
         if c.grad_clip else 1.0
     lr = lr_at(c, step)

@@ -37,6 +37,9 @@ from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import (batch_shardings, init_state,
                                     make_train_step, state_shardings)
 
+__all__ = ["StepRunner", "TrainLoop", "TrainerLog", "AsyncMetrics",
+           "resume", "DEFAULT_PEAK_FLOPS"]
+
 # TPU v5e peak (matches analysis.roofline defaults); override per hardware
 DEFAULT_PEAK_FLOPS = 197e12
 
@@ -133,7 +136,8 @@ class StepRunner:
         self.state_shardings = None
         self.batch_shardings: Dict[str, Any] = {}
         if mesh is not None:
-            self.state_shardings = state_shardings(model, mesh, run)
+            self.state_shardings = state_shardings(model, mesh, run,
+                                                   plan=self.plan)
             self.batch_shardings = batch_shardings(model, mesh, run,
                                                    run.shape)
         self._jit = None        # built on first use: the batch half of
@@ -204,17 +208,44 @@ class StepRunner:
 
     # -- gradient-sync telemetry -----------------------------------------
     def grad_sync_info(self) -> Dict[str, Any]:
-        """The plan's grad-sync shape plus per-step communication volume:
-        strategy, bucket count, per-bucket payload bytes, and the ring
-        all-reduce wire bytes per device per step."""
+        """The plan's grad-sync shape plus per-step communication volume.
+
+        Always present: strategy, bucket count, per-bucket payload bytes
+        (``bucket_bytes``), and the per-device gradient wire bytes per
+        step (``wire_bytes_per_device`` — ring all-reduce volume for
+        ``bucketed_overlap``, reduce-scatter + remainder all-reduce for
+        ``scatter_overlap``).  Under ``scatter_overlap`` the forward
+        param all-gather volume rides along as ``param_gather_bytes`` /
+        ``gather_wire_bytes_per_device`` so operators can see both
+        halves of the decomposed all-reduce."""
         from repro.distributed import gradsync
 
         info = dict(self.plan.describe())
-        buckets = self.plan.grad_buckets(
-            self.model.abstract(jnp.dtype(self.run.param_dtype)))
+        abstract = self.model.abstract(jnp.dtype(self.run.param_dtype))
+        info.update(n_buckets=0, comm_bytes=0, bucket_bytes=[],
+                    wire_bytes_per_device=0.0, param_gather_bytes=0,
+                    gather_wire_bytes_per_device=0.0)
+        sp = self.plan.scatter_plan(abstract)
+        if sp is not None:
+            n = self.plan.dp_size
+            buckets = sp.buckets
+            info.update(gradsync.bucket_plan_stats(buckets))
+            info["bucket_bytes"] = [b.nbytes for b in buckets]
+            info["n_scatter_buckets"] = len(sp.scatter)
+            info["n_psum_buckets"] = len(sp.psum)
+            info["wire_bytes_per_device"] = (
+                gradsync.reduce_scatter_bytes(sp.scatter_bytes, n)
+                + gradsync.ring_allreduce_bytes(sp.psum_bytes, n))
+            sc = set(sp.scatter_indices)
+            gather = sum(
+                gradsync.leaf_nbytes(l) for i, l in enumerate(
+                    jax.tree_util.tree_leaves(abstract)) if i in sc)
+            info["param_gather_bytes"] = int(gather)
+            info["gather_wire_bytes_per_device"] = \
+                gradsync.all_gather_bytes(gather, n)
+            return info
+        buckets = self.plan.grad_buckets(abstract)
         if buckets is None:
-            info.update(n_buckets=0, comm_bytes=0, bucket_bytes=[],
-                        wire_bytes_per_device=0.0)
             return info
         stats = gradsync.bucket_plan_stats(buckets)
         info.update(stats)
@@ -294,11 +325,16 @@ class TrainLoop:
     def __init__(self, runner: StepRunner, *, log_every: int = 10,
                  ckpt_path: Optional[str] = None, ckpt_every: int = 0,
                  ckpt_dir: Optional[str] = None, keep_last_k: int = 0,
+                 pin_steps: tuple = (),
                  process_index: int = 0, process_count: int = 1,
                  async_checkpoint: bool = True, device_prefetch: bool = True,
                  prefetch_size: int = 2, aot_compile: bool = True,
                  metrics_lag: int = 8,
                  peak_flops: float = DEFAULT_PEAK_FLOPS):
+        """``pin_steps`` lists checkpoint steps ``keep_last_k`` GC must
+        never prune — the resume path pins the ``--ckpt-step`` it
+        restored from, so the operator's rollback point survives
+        subsequent saves (see docs/resume.md)."""
         if ckpt_path and ckpt_dir:
             raise ValueError("pass ckpt_path (flat) or ckpt_dir (sharded), "
                              "not both")
@@ -307,6 +343,7 @@ class TrainLoop:
         self.ckpt_path, self.ckpt_every = ckpt_path, ckpt_every
         self.ckpt_dir = ckpt_dir
         self.keep_last_k = keep_last_k
+        self.pin_steps = tuple(pin_steps)
         self.process_index = process_index
         self.process_count = process_count
         self.async_checkpoint = async_checkpoint
@@ -359,7 +396,8 @@ class TrainLoop:
                 self.ckpt_dir, sharded=True,
                 process_index=self.process_index,
                 process_count=self.process_count,
-                keep_last_k=self.keep_last_k)
+                keep_last_k=self.keep_last_k,
+                pin_steps=self.pin_steps)
         elif self.ckpt_path and self.async_checkpoint:
             saver = ckpt.AsyncCheckpointer(self.ckpt_path)
 
@@ -391,7 +429,8 @@ class TrainLoop:
                                   process_index=self.process_index,
                                   process_count=self.process_count,
                                   pipeline_state=pstate,
-                                  keep_last_k=self.keep_last_k)
+                                  keep_last_k=self.keep_last_k,
+                                  pin_steps=self.pin_steps)
             else:
                 ckpt.save(self.ckpt_path, st, step=step_no)
 
@@ -485,6 +524,10 @@ class TrainLoop:
             "grad_buckets": gs["n_buckets"],
             "grad_comm_bytes": gs["comm_bytes"],
             "grad_wire_bytes_per_device": gs["wire_bytes_per_device"],
+            # scatter_overlap only (0 otherwise): the forward-side param
+            # all-gather volume — the other half of the decomposed
+            # all-reduce, hidden under forward compute
+            "param_gather_bytes": gs["param_gather_bytes"],
         }
         return state, log
 

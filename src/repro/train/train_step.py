@@ -5,13 +5,21 @@ derived from the sharding rules (DESIGN.md §5); this is the function the
 multi-pod dry-run lowers and the trainer executes.
 
 Gradient synchronization is dispatched through the
-:class:`~repro.distributed.sharding.ParallelPlan`:
+:class:`~repro.distributed.sharding.ParallelPlan`
+(docs/parallelism.md):
 
 * ``bucketed_overlap`` (ddp, dp>1) — the step runs inside ``shard_map``
   with replicated params and dp-sharded batch; each device computes local
   gradients (accumulated locally over microbatches) and
   ``gradsync.bucketed_psum`` issues one collective per reverse-layer
   bucket, so late-layer reduction overlaps early-layer backward.
+* ``scatter_overlap`` (fsdp/fsdp_tp, dp>1) — params and optimizer state
+  live sharded over the dp axes (ZeRO-3); the ``shard_map``'d step
+  rebuilds full params with one ``all_gather`` per bucket in
+  forward-layer order (prefetchable under the previous layer's
+  matmuls) and reduces gradients straight back to shards with one
+  ``psum_scatter`` per bucket during backward — half the gradient wire
+  bytes of the ddp all-reduce.
 * ``xla_fused`` / ``none`` — the seed pjit path: the partitioner derives
   any collectives from the param/grad shardings.
 """
@@ -30,7 +38,8 @@ from repro.core.accum import accumulate_grads
 from repro.core.mlm import lm_loss, mlm_loss
 from repro.distributed import gradsync
 from repro.distributed import sharding as shd
-from repro.distributed.sharding import GRAD_SYNC_BUCKETED, ParallelPlan
+from repro.distributed.sharding import (GRAD_SYNC_BUCKETED,
+                                        GRAD_SYNC_SCATTER, ParallelPlan)
 from repro.models.attention import DistDecode
 from repro.models.model import Model
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -218,6 +227,8 @@ def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
         plan = ParallelPlan.for_run(run, mesh)
     if plan.grad_sync == GRAD_SYNC_BUCKETED:
         return _make_overlap_ddp_step(model, run, opt, plan)
+    if plan.grad_sync == GRAD_SYNC_SCATTER:
+        return _make_scatter_fsdp_step(model, run, opt, plan)
     constrain = None
     if mesh is not None:
         constrain = shd.activation_sharding(
@@ -271,6 +282,22 @@ def make_grad_fn(model: Model, run: RunConfig,
             body, mesh=plan.mesh,
             in_specs=(P(), _dp_batch_spec(plan)),
             out_specs=(P(), P(), P()), check_vma=False)
+    if plan.grad_sync == GRAD_SYNC_SCATTER:
+        accum, axis, _ = _scatter_accum(model, run, plan)
+        pspecs = plan.scatter_param_specs(
+            model.abstract(jnp.dtype(run.param_dtype)))
+
+        def scatter_body(params, batch):
+            loss, grads, metrics = accum(params, batch)
+            return jax.lax.psum(loss, axis), grads, metrics
+
+        # grads come out as shards; the P(dp)-on-shard-dim out specs
+        # reassemble them into the full summed gradient tree, so callers
+        # compare against the fused reference leaf-for-leaf
+        return shd.shard_map(
+            scatter_body, mesh=plan.mesh,
+            in_specs=(pspecs, _dp_batch_spec(plan)),
+            out_specs=(P(), pspecs, P()), check_vma=False)
 
     def grad_fn(params, batch):
         def loss_fn(p, b):
@@ -341,6 +368,76 @@ def _make_overlap_ddp_step(model: Model, run: RunConfig, opt: AdamWConfig,
         out_specs=(P(), P()), check_vma=False)
 
 
+def _scatter_accum(model: Model, run: RunConfig, plan: ParallelPlan):
+    """Shared core of the ``scatter_overlap`` (fsdp) paths: per-bucket
+    all_gather rebuilds full params, per-shard loss -> local microbatch
+    accumulation -> per-bucket psum_scatter back to grad shards.
+
+    Returns ``(accum(local_params, local_batch) -> (loss, grads,
+    metrics), axis, scatter_plan)``.  ``accum`` must be called INSIDE
+    shard_map over the plan's mesh; ``grads`` come back in the sharded
+    state layout (shard-shaped leaves for scatterable indices, full
+    synced leaves for the replicated remainder), ``loss`` is this
+    shard's contribution, metrics are globally reduced.
+
+    The gather runs once per step, OUTSIDE the microbatch scan — full
+    params persist across microbatches (per-layer regather would save
+    that memory at n_micro x the gather traffic), and the scatter runs
+    once, on the final accumulated gradients.
+    """
+    axis = _axis_arg(plan.dp_axes)
+    sp = plan.scatter_plan(model.abstract(jnp.dtype(run.param_dtype)))
+
+    def accum(local_params, batch):
+        full_params = gradsync.gather_fsdp_params(local_params, axis, sp)
+
+        def loss_fn(p, b):
+            return loss_for(model, p, b, run=run, mesh=None,
+                            axis_names=axis, dp_size=plan.dp_size)
+
+        return accumulate_grads(
+            loss_fn, full_params, batch, run.microbatch or 1,
+            sync_grads=lambda g: gradsync.bucketed_psum_scatter(
+                g, axis, sp))
+
+    return accum, axis, sp
+
+
+def _make_scatter_fsdp_step(model: Model, run: RunConfig, opt: AdamWConfig,
+                            plan: ParallelPlan) -> Callable:
+    """The overlap-scheduled fsdp (ZeRO-3) train step.
+
+    Params and optimizer moments live SHARDED over the dp axes (each
+    leaf split on its first dp-divisible dim; see
+    ``ParallelPlan.scatter_param_specs``).  Inside one ``shard_map``:
+    per-bucket ``all_gather`` rebuilds full params in forward-layer
+    order (each gather independent — the layer-ahead prefetch handle),
+    backward produces full local grads, and per-bucket ``psum_scatter``
+    in reverse-layer order reduces them straight back to shards — half
+    the gradient wire bytes of the ddp all-reduce.  The optimizer then
+    updates only this device's shard of params/mu/nu (the grad-norm is
+    assembled via one scalar psum so clipping matches the fused path).
+    """
+    accum, axis, sp = _scatter_accum(model, run, plan)
+    pspecs = plan.scatter_param_specs(
+        model.abstract(jnp.dtype(run.param_dtype)))
+    state_spec = {"params": pspecs,
+                  "opt": {"mu": pspecs, "nu": pspecs, "step": P()}}
+
+    def body(state, batch):
+        _, grads, metrics = accum(state["params"], batch)
+        gnorm = gradsync.fsdp_global_norm(grads, axis, sp)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"], grad_norm=gnorm)
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return shd.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(state_spec, _dp_batch_spec(plan)),
+        out_specs=(state_spec, P()), check_vma=False)
+
+
 # ---------------------------------------------------------------------------
 # Sharding trees for jit in/out_shardings
 # ---------------------------------------------------------------------------
@@ -353,8 +450,23 @@ def param_shardings(model: Model, mesh: Mesh, run: RunConfig):
         mesh, run.sharding, drop_axes=drop)
 
 
-def state_shardings(model: Model, mesh: Mesh, run: RunConfig):
-    p_sh = param_shardings(model, mesh, run)
+def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
+                    plan: Optional[ParallelPlan] = None):
+    """NamedSharding tree for the train state ``{params, opt}``.
+
+    Default: the mode's logical-axis rules (``param_shardings``) applied
+    to params and moments alike.  Under a ``scatter_overlap`` plan the
+    layout is instead the plan's shard-dim split (every dp-divisible
+    leaf sharded over the dp axes), matching the shard_map in/out specs
+    of the scatter step — optimizer state included, so each device
+    stores and updates only its 1/dp slice (ZeRO-3)."""
+    if plan is not None and plan.grad_sync == GRAD_SYNC_SCATTER:
+        specs = plan.scatter_param_specs(
+            model.abstract(jnp.dtype(run.param_dtype)))
+        p_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs)
+    else:
+        p_sh = param_shardings(model, mesh, run)
     return {
         "params": p_sh,
         "opt": {"mu": p_sh, "nu": p_sh,

@@ -92,6 +92,52 @@ def test_save_sharded_keep_last_k_prunes_after_commit(tmp_path):
     assert ckpt.step_dir(base, 2).split("/")[-1] in os.listdir(base)
 
 
+def test_gc_never_prunes_protected_steps(tmp_path):
+    # the --ckpt-step/keep_last_k interaction (docs/resume.md): a step
+    # the operator pinned a resume to must survive GC regardless of age,
+    # and must not consume the keep-last-k budget of newer checkpoints
+    base = str(tmp_path / "ck")
+    for s in (2, 4, 6, 8):
+        ckpt.save_sharded(base, tree(), step=s)
+    removed = ckpt.gc_checkpoints(base, keep_last_k=2, protect=(4,))
+    assert removed == [2]
+    assert sorted(os.listdir(base)) == ["ckpt-00000004", "ckpt-00000006",
+                                       "ckpt-00000008"]
+    # protection flows through save_sharded's post-commit GC too
+    ckpt.save_sharded(base, tree(), step=10, keep_last_k=2,
+                      pin_steps=(4,))
+    assert sorted(os.listdir(base)) == ["ckpt-00000004", "ckpt-00000008",
+                                       "ckpt-00000010"]
+
+
+@pytest.mark.slow
+def test_pinned_ckpt_step_survives_resumed_run_gc(setup):
+    """Resume from --ckpt-step N with keep_last_k small enough that the
+    continuing run's saves would normally GC step N: the pin must keep
+    the restored-from checkpoint on disk."""
+    make_pipe, make_runner = setup["make_pipe"], setup["make_runner"]
+    ck = str(setup["tmp"] / "ck_pin")
+    p = make_pipe()
+    TrainLoop(make_runner(), log_every=1, ckpt_dir=ck,
+              ckpt_every=2).run(p, 4, seed=0)
+    p.close()
+    assert os.path.isdir(ckpt.step_dir(ck, 2))
+
+    p2 = make_pipe()
+    r2 = make_runner()
+    state, start = resume(ck, r2, pipeline=p2, step=2)
+    assert start == 2
+    _, log = TrainLoop(r2, log_every=1, ckpt_dir=ck, ckpt_every=1,
+                       keep_last_k=1, pin_steps=(2,)).run(
+        p2, STEPS, state=state, start_step=start)
+    p2.close()
+    kept = sorted(os.listdir(ck))
+    assert "ckpt-00000002" in kept, kept          # the pin held
+    assert f"ckpt-{STEPS:08d}" in kept            # newest kept
+    # unpinned intermediates were pruned down to keep_last_k
+    assert len(kept) == 2, kept
+
+
 def test_resume_honors_explicit_ckpt_step(tmp_path):
     base = str(tmp_path / "ck")
     t5 = {"w": np.full(3, 5.0, np.float32)}

@@ -1,0 +1,120 @@
+"""Docs honesty checks (CI: the `docs` job; tier-1: tests/test_docs.py).
+
+Two checks keep `docs/*.md` + README from rotting:
+
+1. Link/reference check (`check_links`): every relative markdown link
+   must resolve to an existing file, and every backticked path-like
+   reference (`a/b.py`, `docs/x.md` — a slash plus a .py/.md suffix)
+   must name a real file.  Paths are resolved against the repo root,
+   then `src/`, then `src/repro/` (so docs can say `train/runner.py`
+   the way the module docstrings do).
+
+2. Snippet check (`run_snippets`, CI only — needs the tier-1 jax env):
+   every fenced ```python block in docs/parallelism.md is executed with
+   `PYTHONPATH=src` on the CPU backend.  Snippets are specs, not
+   decoration: if the ParallelPlan contract or the fallback table
+   drifts, the doc fails CI.
+
+Usage:
+    python tools/check_docs.py            # links only (fast, no jax)
+    python tools/check_docs.py --snippets # links + run doc snippets
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import subprocess
+import sys
+from typing import List, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backticked path-ish token: contains a '/', ends in .py or .md
+PATH_REF = re.compile(r"`([^`\s]*/[^`\s]*\.(?:py|md))`")
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+SEARCH_PREFIXES = ("", "src/", "src/repro/")
+
+
+def doc_files() -> List[str]:
+    return sorted(glob.glob(os.path.join(ROOT, "docs", "*.md"))) + \
+        [os.path.join(ROOT, "README.md")]
+
+
+def _resolves(ref: str, base_dir: str) -> bool:
+    ref = ref.split("#", 1)[0]
+    if not ref:
+        return True  # pure anchor
+    cands = [os.path.normpath(os.path.join(base_dir, ref))]
+    cands += [os.path.join(ROOT, p, ref) for p in SEARCH_PREFIXES]
+    return any(os.path.exists(c) for c in cands)
+
+
+def check_links(paths: List[str]) -> List[str]:
+    """Return a list of human-readable failures (empty = clean)."""
+    errors = []
+    for path in paths:
+        with open(path) as f:
+            text = f.read()
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, ROOT)
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not _resolves(target, base):
+                errors.append(f"{rel}: broken link -> {target}")
+        for m in PATH_REF.finditer(text):
+            if not _resolves(m.group(1), base):
+                errors.append(f"{rel}: missing file reference -> "
+                              f"`{m.group(1)}`")
+    return errors
+
+
+def snippets(path: str) -> List[str]:
+    with open(path) as f:
+        return [m.group(1) for m in FENCE.finditer(f.read())]
+
+
+def run_snippets(path: str) -> List[Tuple[int, str]]:
+    """Run each fenced python block; return (index, stderr) failures."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    failures = []
+    for i, code in enumerate(snippets(path)):
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, timeout=300)
+        if proc.returncode != 0:
+            failures.append((i, proc.stderr[-2000:]))
+        else:
+            print(f"  snippet {i}: OK "
+                  f"({proc.stdout.strip().splitlines()[-1] if proc.stdout.strip() else 'no output'})")
+    return failures
+
+
+def main() -> int:
+    paths = doc_files()
+    print(f"link-checking {len(paths)} files")
+    errors = check_links(paths)
+    for e in errors:
+        print(f"FAIL {e}")
+    if "--snippets" in sys.argv[1:]:
+        target = os.path.join(ROOT, "docs", "parallelism.md")
+        print(f"running fenced python snippets in "
+              f"{os.path.relpath(target, ROOT)}")
+        for i, err in run_snippets(target):
+            errors.append(f"docs/parallelism.md: snippet {i} failed")
+            print(f"FAIL snippet {i}:\n{err}")
+    if errors:
+        print(f"{len(errors)} docs check failure(s)")
+        return 1
+    print("docs checks OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
