@@ -18,8 +18,16 @@ CSV rows (derived = the claim-relevant figure of merit).
                          scatter_overlap step (per-bucket all_gather
                          prefetch + psum_scatter) vs the XLA-fused fsdp
                          baseline — grad equivalence, 20-step loss
-                         trajectory, per-bucket comm bytes, and the ~2x
-                         gradient wire-byte drop vs the ddp all-reduce
+                         trajectory, per-bucket comm bytes, the ~2x
+                         gradient wire-byte drop vs the ddp all-reduce,
+                         and the donate_gather peak-memory delta
+  pipeline_overlap       pipeline parallelism (2 stages x 4 dp on 8 CPU
+                         devices): staged 1F1B/GPipe step vs the
+                         unpipelined ddp runner — grad equivalence at
+                         microbatches 2 and 8, 20-step 1F1B loss
+                         trajectory, schedule bubble fraction vs the
+                         analytic (S-1)/(S-1+M) bound, activation
+                         ppermute volume
   data_pipeline          deterministic pipeline vs seed loader throughput,
                          per-host shard disjointness, resume overhead
   kernel_*               Pallas kernels (interpret mode) vs jnp oracle
@@ -29,6 +37,14 @@ Pass bench-name prefixes as argv to run a subset, and ``--json PATH`` to
 also write the rows as a JSON list (CI uploads it as an artifact), e.g.:
 
   PYTHONPATH=src python benchmarks/run.py train_overlap kernel --json out.json
+
+``--baseline`` additionally lands the rows as committed trajectories —
+one ``BENCH_<group>.json`` per benchmark group at the repo root.  CI
+compares every fresh ``--json`` artifact against those with
+``tools/check_bench_regression.py`` and fails on a >15% step-time
+regression (overlap-vs-baseline ratio, so the gate is machine-speed
+independent).  After an intentional perf change, re-run with
+``--baseline`` and commit the updated files.
 """
 from __future__ import annotations
 
@@ -518,6 +534,34 @@ def _fsdp_overlap_worker():
                           run, mesh, grad_bucket_mb=0.25)).grad_sync_info()
     ddp_wire = gradsync.ring_allreduce_bytes(info["comm_bytes"], 8)
     out["wire_ratio_vs_ddp"] = info["wire_bytes_per_device"] / ddp_wire
+
+    # -- peak-memory delta of donate_gather ------------------------------
+    # donate=True differentiates from the shards (gather inside the vjp;
+    # its transpose IS the per-bucket psum_scatter), so backward hands
+    # each bucket's full-width grad buffer straight to the collective
+    # instead of materializing the full f32 grad tree.  XLA's liveness
+    # already frees per-bucket on the explicit-scatter path, so the
+    # measured delta documents how much (if anything) remains.
+    from repro.data.device_prefetch import place_on
+
+    mem = {}
+    for dg in (False, True):
+        plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25,
+                                    donate_gather=dg)
+        runner = StepRunner(model, run, opt, mesh, plan=plan)
+        state = runner.init_state(0)
+        pbatch = {k: place_on(jnp.asarray(v),
+                              runner.batch_shardings.get(k))
+                  for k, v in next(batches(3)).items()}
+        runner.compile(state, pbatch)
+        ma = runner.compiled.memory_analysis()
+        mem["donate" if dg else "hold"] = {
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "arg_bytes": int(ma.argument_size_in_bytes),
+        }
+    out["peak_memory"] = mem
+    out["peak_memory"]["delta_bytes"] = (
+        mem["hold"]["temp_bytes"] - mem["donate"]["temp_bytes"])
     print(json.dumps(out))
 
 
@@ -558,6 +602,11 @@ def bench_fsdp_overlap():
                   f"_micro4={e4['worst_err_over_tol']:.2f}"
                   f"_traj_rel={traj:.1e}"
                   f"_wire_vs_ddp={out['wire_ratio_vs_ddp']:.2f}x"))
+    pm = out["peak_memory"]
+    emit(name="fsdp_overlap_peak_mem", us=0,
+         derived=(f"temp_hold={pm['hold']['temp_bytes']/1e6:.2f}MB"
+                  f"_temp_donate={pm['donate']['temp_bytes']/1e6:.2f}MB"
+                  f"_delta={pm['delta_bytes']/1e6:.2f}MB"))
     for e in (e1, e4):
         assert e["worst_err_over_tol"] <= 1.0 and e["loss_match"], (
             "scatter fsdp grads must match the fused reference", out)
@@ -572,6 +621,175 @@ def bench_fsdp_overlap():
     assert s["stall"] <= f["stall"] + 0.05, (
         "scatter-overlap dispatch stall must not exceed the fused fsdp "
         "baseline", out)
+
+
+def _pipeline_overlap_worker():
+    """Runs in a subprocess with 8 virtual CPU devices (2 pipeline
+    stages x 4-wide data axis); prints one JSON line.  The acceptance
+    surface of the pipeline-parallel subsystem
+    (``distributed/pipeline.py``):
+
+      equivalence — staged 1F1B gradients vs the unpipelined
+                    single-device reference at microbatch counts 2 and
+                    8, and a 20-step 1F1B loss trajectory vs the
+                    bucketed-ddp runner on the same batches
+      bubble      — the schedule-table idle fraction must not exceed
+                    the analytic ``(S-1)/(S-1+M)`` bound x 1.25
+      telemetry   — step time + stall for gpipe vs 1f1b, grad bucket
+                    layout, per-step activation ppermute volume
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.distributed.sharding import ParallelPlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.runner import StepRunner, TrainLoop
+    from repro.train.train_step import init_state, make_grad_fn
+
+    B, S, STEPS, STAGES = 32, 64, 20, 2
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=128),
+                              vocab_size=512, max_position=S)
+    # the reduced schedule is 1 block; pipelining needs a
+    # stage-divisible stack — 4 layers over 2 stages
+    g = cfg.schedule[0]
+    cfg = dataclasses.replace(
+        cfg, schedule=(dataclasses.replace(g, pattern=g.pattern[:1],
+                                           repeats=4),))
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=4, pipe=STAGES)
+    opt = AdamWConfig(total_steps=STEPS)
+    out = {"equiv": {}, "bubble": {}}
+
+    def batches(seed=0):
+        rng = np.random.default_rng(seed)
+        while True:
+            toks = rng.integers(4, cfg.vocab_size, (B, S)).astype(np.int32)
+            yield {"tokens": toks, "labels": toks,
+                   "loss_mask": np.ones((B, S), np.float32)}
+
+    # -- gradient equivalence at microbatch counts 2 and 8 ---------------
+    for n_micro in (2, 8):
+        run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                        sharding="pp_dp", pp_schedule="1f1b",
+                        param_dtype="float32",
+                        activation_dtype="float32", microbatch=n_micro)
+        params = init_state(model, jax.random.PRNGKey(0), run)["params"]
+        batch = {k: jnp.asarray(v) for k, v in next(batches(7)).items()}
+        ref_run = dataclasses.replace(run, sharding="ddp")
+        _, gref, mref = jax.jit(make_grad_fn(model, ref_run))(params,
+                                                              batch)
+        plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.25)
+        assert plan.grad_sync == "pipe_overlap", plan.describe()
+        _, gp, mp = jax.jit(make_grad_fn(model, run, mesh, plan))(
+            params, batch)
+        worst = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(gref),
+                        jax.tree_util.tree_leaves(gp)):
+            a, b = np.asarray(a), np.asarray(b)
+            tol = 1e-6 * max(float(np.abs(a).max()), 1.0) + 1e-8
+            worst = max(worst, float(np.abs(a - b).max()) / tol)
+        out["equiv"][str(n_micro)] = {
+            "worst_err_over_tol": worst,
+            "loss_match": abs(float(mref["loss"]) - float(mp["loss"]))
+                          <= 1e-6 * abs(float(mref["loss"])),
+        }
+
+    # -- 20-step loss trajectory + step time / stall / bubble ------------
+    M = 4
+
+    def measure(sharding, mesh_, schedule="1f1b"):
+        run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                        sharding=sharding, pp_schedule=schedule,
+                        param_dtype="float32",
+                        activation_dtype="float32", microbatch=M)
+        plan = ParallelPlan.for_run(run, mesh_, grad_bucket_mb=0.25)
+        runner = StepRunner(model, run, opt, mesh_, plan=plan)
+        gs = runner.grad_sync_info()
+        TrainLoop(runner, log_every=8).run(batches(1), 3)  # warm compile
+        _, log = TrainLoop(runner, log_every=1).run(batches(2), STEPS)
+        t = log.telemetry
+        return {"grad_sync": gs["grad_sync"],
+                "stall": t["stall_fraction"],
+                "step_ms": t["step_time_ema"] * 1e3,
+                "n_buckets": gs["n_buckets"],
+                "comm_mb": gs["comm_bytes"] / 1e6,
+                "wire_mb": gs["wire_bytes_per_device"] / 1e6,
+                "bubble": gs.get("bubble_fraction", 0.0),
+                "bubble_analytic": gs.get("bubble_analytic", 0.0),
+                "act_wire_mb":
+                    gs.get("act_wire_bytes_per_device", 0.0) / 1e6,
+                "buffer_depth": gs.get("pp_buffer_depth", 0),
+                "losses": [m["loss"] for m in log.metrics]}
+
+    out["baseline"] = measure("ddp", make_host_mesh(8))
+    out["1f1b"] = measure("pp_dp", mesh, "1f1b")
+    out["gpipe"] = measure("pp_dp", mesh, "gpipe")
+    print(json.dumps(out))
+
+
+def bench_pipeline_overlap():
+    import subprocess
+    import sys as _sys
+
+    from repro.distributed.pipeline import analytic_bubble
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [_sys.executable, os.path.abspath(__file__),
+         "--pipeline-overlap-worker"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    us = (time.perf_counter() - t0) * 1e6
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    base, ob, og = out["baseline"], out["1f1b"], out["gpipe"]
+    emit(name="pipeline_overlap_step", us=us,
+         derived=(f"step_ddp={base['step_ms']:.1f}ms_1f1b="
+                  f"{ob['step_ms']:.1f}ms_gpipe={og['step_ms']:.1f}ms"
+                  f"_buckets={ob['n_buckets']}_act_wire="
+                  f"{ob['act_wire_mb']:.2f}MB/dev"))
+    emit(name="pipeline_overlap_bubble", us=0,
+         derived=(f"bubble_1f1b={ob['bubble']:.3f}_gpipe="
+                  f"{og['bubble']:.3f}_analytic="
+                  f"{ob['bubble_analytic']:.3f}"
+                  f"_depth_1f1b={ob['buffer_depth']}"
+                  f"_gpipe={og['buffer_depth']}"))
+    e2, e8 = out["equiv"]["2"], out["equiv"]["8"]
+    traj = max(abs(a - b) / max(abs(a), 1e-9)
+               for a, b in zip(base["losses"], ob["losses"]))
+    emit(name="pipeline_overlap_equiv", us=0,
+         derived=(f"err_over_tol_micro2={e2['worst_err_over_tol']:.2f}"
+                  f"_micro8={e8['worst_err_over_tol']:.2f}"
+                  f"_traj_rel={traj:.1e}"))
+    for e in (e2, e8):
+        assert e["worst_err_over_tol"] <= 1.0 and e["loss_match"], (
+            "staged 1F1B grads must match the unpipelined reference",
+            out)
+    assert ob["grad_sync"] == og["grad_sync"] == "pipe_overlap", out
+    assert len(base["losses"]) == len(ob["losses"]) == 20
+    # 20 steps of f32 Adam on matching gradients: reduction-order noise
+    assert traj <= 1e-5, ("1F1B loss trajectory must match the "
+                          "unpipelined baseline", out)
+    # the schedule-table bubble must respect the analytic bound
+    bound = analytic_bubble(2, 4) * 1.25
+    assert ob["bubble"] <= bound and og["bubble"] <= bound, (out, bound)
+    # 1F1B's memory edge: in-flight stage inputs bounded by S, not M
+    assert ob["buffer_depth"] <= og["buffer_depth"], out
 
 
 def bench_data_pipeline(tmp):
@@ -723,6 +941,9 @@ def main() -> None:
     if "--fsdp-overlap-worker" in argv:
         _fsdp_overlap_worker()
         return
+    if "--pipeline-overlap-worker" in argv:
+        _pipeline_overlap_worker()
+        return
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
@@ -730,6 +951,8 @@ def main() -> None:
             sys.exit("--json needs a path argument")
         json_path = argv[i + 1]
         argv = argv[:i] + argv[i + 2:]
+    baseline = "--baseline" in argv
+    argv = [a for a in argv if a != "--baseline"]
     names = [a for a in argv if not a.startswith("-")]
 
     def want(bench: str) -> bool:
@@ -756,6 +979,8 @@ def main() -> None:
         bench_grad_overlap()
     if want("fsdp_overlap"):
         bench_fsdp_overlap()
+    if want("pipeline_overlap"):
+        bench_pipeline_overlap()
     if want("data_pipeline"):
         with tempfile.TemporaryDirectory() as tmp:
             bench_data_pipeline(tmp)
@@ -767,6 +992,18 @@ def main() -> None:
         with open(json_path, "w") as f:
             json.dump(RESULTS, f, indent=2)
         print(f"# wrote {len(RESULTS)} rows -> {json_path}", file=sys.stderr)
+    if baseline:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        groups = ("train_overlap", "grad_overlap", "fsdp_overlap",
+                  "pipeline_overlap", "data_pipeline", "mlm", "kernel")
+        for g in groups:
+            rows = [r for r in RESULTS if r["name"].startswith(g)]
+            if not rows:
+                continue
+            p = os.path.join(root, f"BENCH_{g}.json")
+            with open(p, "w") as f:
+                json.dump(rows, f, indent=2)
+            print(f"# baseline {len(rows)} rows -> {p}", file=sys.stderr)
 
 
 if __name__ == "__main__":

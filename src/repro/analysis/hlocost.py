@@ -308,3 +308,60 @@ class HloCostModel:
 
 def analyze_text(hlo_text: str, pallas_cost: Optional[Cost] = None) -> Cost:
     return HloCostModel(hlo_text, pallas_cost).cost()
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-block cost (pipeline stage balancing)
+# ---------------------------------------------------------------------------
+
+
+def block_cost(cfg, spec, seq_len: int, *, batch: int = 1,
+               dtype_bytes: int = 2) -> Cost:
+    """Analytic per-token-batch cost of ONE residual block of ``spec``
+    (a ``configs.base.LayerSpec``) — the per-block weights the pipeline
+    stage partitioner balances (``distributed.pipeline.plan_stages``).
+
+    The estimate follows the same 2·m·n·k matmul accounting the HLO
+    model uses, evaluated symbolically instead of from lowered HLO (the
+    partitioner runs before anything is lowered): qkv/out projections +
+    the S² score/weighted-sum terms for attention, the (gated) MLP
+    GEMMs, and the SSD chunk-scan terms for mamba blocks.  Bytes are
+    the parameter + boundary-activation traffic.  Absolute numbers are
+    rough; only the *ratios* between blocks matter for balancing.
+    """
+    B, S, d = batch, seq_len, cfg.d_model
+    flops = 0.0
+    nbytes = 0.0
+    if spec.kind in ("attn", "shared_attn", "mla"):
+        H, Hkv, D = cfg.n_heads, cfg.n_kv_heads or cfg.n_heads, cfg.head_dim
+        if spec.kind == "mla" and cfg.mla is not None:
+            m = cfg.mla
+            D = m.qk_nope_head_dim + m.qk_rope_head_dim
+            proj_params = d * (m.kv_lora_rank + H * (D + m.v_head_dim)) \
+                + m.kv_lora_rank * H * D + H * m.v_head_dim * d
+        else:
+            proj_params = d * (H + 2 * Hkv) * D + H * D * d
+        win = min(spec.window, S) if spec.window else S
+        flops += 2.0 * B * S * proj_params            # projections
+        flops += 4.0 * B * H * S * win * D            # scores + out
+        nbytes += proj_params * dtype_bytes
+    elif spec.kind == "mamba" and cfg.ssm is not None:
+        from repro.models.ssm import ssm_dims
+
+        d_inner, H, Pd, G, N = ssm_dims(cfg)
+        L = cfg.ssm.chunk
+        proj_params = d * (2 * d_inner + 2 * G * N + H) + d_inner * d
+        flops += 2.0 * B * S * proj_params
+        flops += 2.0 * B * H * S * (L * (N + Pd) + 2.0 * N * Pd)
+        nbytes += proj_params * dtype_bytes
+    if spec.has_mlp:
+        if spec.moe and cfg.moe is not None:
+            ff = cfg.moe.expert_ff or cfg.d_ff
+            n_act = cfg.moe.top_k + cfg.moe.n_shared
+            mlp_params = n_act * (3 if cfg.gated_mlp else 2) * d * ff
+        else:
+            mlp_params = (3 if cfg.gated_mlp else 2) * d * cfg.d_ff
+        flops += 2.0 * B * S * mlp_params
+        nbytes += mlp_params * dtype_bytes
+    nbytes += 2.0 * B * S * d * dtype_bytes           # boundary activations
+    return Cost(flops=flops, bytes=nbytes)

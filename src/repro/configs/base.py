@@ -209,7 +209,10 @@ INPUT_SHAPES = {
 class RunConfig:
     model: ModelConfig
     shape: ShapeConfig
-    sharding: str = "fsdp_tp"        # ddp | fsdp | tp | fsdp_tp
+    sharding: str = "fsdp_tp"        # ddp | fsdp | tp | fsdp_tp | pp | pp_dp
+    pp_schedule: str = "1f1b"        # pipeline microbatch schedule for the
+                                     # pp modes: gpipe | 1f1b (ignored
+                                     # elsewhere; docs/parallelism.md)
     param_dtype: str = "bfloat16"
     activation_dtype: str = "bfloat16"
     remat: bool = True

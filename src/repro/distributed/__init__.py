@@ -1,19 +1,20 @@
 """Distributed execution: sharding rules, the ParallelPlan, gradient
-synchronization, and multi-controller runtime wiring.
+synchronization, pipeline parallelism, and multi-controller runtime
+wiring.
 
-Mesh-axis names (``pod``/``data``/``model``) are defined once in
-:mod:`repro.distributed.sharding`; see ``docs/parallelism.md`` for the
-full treatment of modes and grad-sync strategies.
+Mesh-axis names (``pod``/``pipe``/``data``/``model``) are defined once
+in :mod:`repro.distributed.sharding`; see ``docs/parallelism.md`` for
+the full treatment of modes and grad-sync strategies.
 """
 from __future__ import annotations
 
 import os
 from typing import Optional
 
-from repro.distributed import gradsync, sharding  # noqa: F401
+from repro.distributed import gradsync, pipeline, sharding  # noqa: F401
 from repro.distributed.sharding import ParallelPlan  # noqa: F401
 
-__all__ = ["ParallelPlan", "gradsync", "sharding",
+__all__ = ["ParallelPlan", "gradsync", "pipeline", "sharding",
            "maybe_initialize_distributed"]
 
 # env keys consulted by maybe_initialize_distributed, in priority order;

@@ -1,0 +1,573 @@
+"""Pipeline parallelism: stage partitioning, microbatch schedules, and
+the staged SPMD executor.
+
+The paper scales data parallelism until communication stops hiding
+behind compute; past that point every production recipe it leans on
+(the Duan et al. survey, the Frontier study) layers a *pipeline* axis on
+top: the block stack is split into contiguous stages, each stage lives
+on its own slice of the mesh, and microbatches stream through so all
+stages compute concurrently.  This module adds that third axis — named
+``pipe``, next to ``pod``/``data``/``model`` (see
+``repro.distributed.sharding``) — as three orthogonal pieces:
+
+* **Stage partitioning** (:func:`plan_stages`, :func:`stage_bounds`):
+  contiguous partition of the per-block cost vector (from
+  ``analysis.hlocost.block_cost``) minimizing the max per-stage cost.
+  The SPMD executor additionally requires *equal-depth* stages (every
+  pipe rank runs the same program on same-shaped params), which for the
+  uniform-pattern models it supports coincides with the cost-balanced
+  partition; :func:`stage_compatible` is the static gate.
+
+* **Schedules** (:class:`PipeSchedule`, :func:`make_schedule`): GPipe
+  (all forwards, then all backwards — in-flight activations grow with
+  the microbatch count M) and 1F1B (forward/backward interleaved at
+  alternating phase — in-flight bounded by the stage count S).  A
+  schedule is a static table of ticks; per-tick microbatch indices are
+  affine in the (traced) stage index, which is what keeps the executor
+  a single SPMD program.  Both schedules idle each stage for S-1 of
+  S-1+M tick-pairs: :meth:`PipeSchedule.bubble_fraction` counts idle
+  slots in the table and equals the analytic ``(S-1)/(S-1+M)``.
+
+* **The executor** (:func:`pipeline_grads`): runs INSIDE ``shard_map``
+  over a mesh carrying ``pipe``.  Per tick, each rank runs its stage on
+  the activation received via ``ppermute`` (forward) and/or replays its
+  stage under ``jax.vjp`` to push a cotangent upstream (backward —
+  stage inputs are kept in a rotating buffer and the forward is
+  *recomputed*, so backward memory is one stage's working set).  Loss
+  pieces use per-microbatch global denominators (one scalar ``psum``
+  per emitted microbatch), reproducing the unpipelined accumulation
+  semantics exactly: per-device gradients SUM across the data axes —
+  and across ``pipe`` for the replicated embed/head leaves — to the
+  global-batch gradient, so within-stage sync reuses
+  ``gradsync.bucketed_psum`` unchanged.
+
+Bubble ticks compute on junk (zero-initialized) buffers with zero
+cotangents; the vjp is linear in the cotangent, so junk contributes
+exactly zero to gradients and (masked) metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import gradsync
+
+__all__ = [
+    "PIPE_AXIS", "stage_compatible", "plan_stages", "stage_bounds",
+    "stage_imbalance", "PipeTick", "PipeSchedule", "make_schedule",
+    "analytic_bubble", "stage_param_leaf_indices", "stage_param_specs",
+    "PipeSyncPlan", "partition_pipe_buckets", "pipe_grad_sync",
+    "pipe_global_norm", "pipeline_grads", "activation_wire_bytes",
+]
+
+PIPE_AXIS = "pipe"
+
+
+# ---------------------------------------------------------------------------
+# Static compatibility + stage partitioning
+# ---------------------------------------------------------------------------
+
+
+def stage_compatible(cfg) -> Tuple[bool, str]:
+    """Can this model's block stack be cut into equal SPMD stages?
+
+    The executor scans a contiguous slice of a SINGLE uniform block
+    stack on every pipe rank, so it requires one schedule group with a
+    one-layer pattern (the plain-transformer shape every >=1B config in
+    this repo reduces to), no cross-stack weight sharing, no
+    encoder/decoder or vision prefix (their extra compute is glued to
+    specific stages), and no MoE (the aux loss needs global router
+    statistics — same reason the overlap grad-sync paths decline it).
+    Returns ``(ok, reason)``; reason names the first failing gate.
+    """
+    if cfg.moe is not None:
+        return False, "moe"
+    if cfg.is_encoder_decoder:
+        return False, "encoder_decoder"
+    if getattr(cfg, "n_image_tokens", 0):
+        return False, "image_prefix"
+    if len(cfg.schedule) != 1:
+        return False, "multi_group_schedule"
+    g = cfg.schedule[0]
+    if len(g.pattern) != 1:
+        return False, "multi_layer_pattern"
+    if g.pattern[0].kind == "shared_attn":
+        return False, "shared_weights"
+    return True, "ok"
+
+
+def plan_stages(costs: Sequence[float], n_stages: int
+                ) -> List[Tuple[int, int]]:
+    """Contiguous partition of ``costs`` into ``n_stages`` slices
+    minimizing the maximum per-stage cost (classic linear-partition DP).
+    Returns ``[(lo, hi), ...]`` half-open block index bounds."""
+    n = len(costs)
+    if n_stages <= 0 or n < n_stages:
+        raise ValueError(f"cannot cut {n} blocks into {n_stages} stages")
+    pref = np.concatenate([[0.0], np.cumsum(costs)])
+    seg = lambda i, j: pref[j] - pref[i]
+    # dp[k][j] = min over first-k-stages-cover-first-j-blocks of max cost
+    dp = np.full((n_stages + 1, n + 1), np.inf)
+    cut = np.zeros((n_stages + 1, n + 1), np.int64)
+    dp[0][0] = 0.0
+    for k in range(1, n_stages + 1):
+        for j in range(k, n + 1):
+            for i in range(k - 1, j):
+                c = max(dp[k - 1][i], seg(i, j))
+                if c < dp[k][j]:
+                    dp[k][j], cut[k][j] = c, i
+    bounds: List[Tuple[int, int]] = []
+    j = n
+    for k in range(n_stages, 0, -1):
+        i = int(cut[k][j])
+        bounds.append((i, j))
+        j = i
+    return bounds[::-1]
+
+
+def _block_costs(cfg, seq_len: int) -> List[float]:
+    """Per-block analytic flops in stack order (the vector both the
+    partitioner and the imbalance telemetry consume)."""
+    from repro.analysis.hlocost import block_cost
+
+    return [block_cost(cfg, s, seq_len).flops
+            for g in cfg.schedule for _ in range(g.repeats)
+            for s in g.pattern]
+
+
+def stage_bounds(cfg, n_stages: int, seq_len: int) -> List[Tuple[int, int]]:
+    """Cost-balanced stage bounds for a model config, from the analytic
+    per-block estimates (``analysis.hlocost.block_cost``)."""
+    return plan_stages(_block_costs(cfg, seq_len), n_stages)
+
+
+def stage_imbalance(cfg, bounds: Sequence[Tuple[int, int]],
+                    seq_len: int) -> float:
+    """max/mean per-stage cost ratio of a partition (1.0 = perfectly
+    balanced); telemetry for operators choosing a stage count."""
+    costs = _block_costs(cfg, seq_len)
+    per = [sum(costs[lo:hi]) for lo, hi in bounds]
+    return max(per) / max(1e-9, sum(per) / len(per))
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def analytic_bubble(n_stages: int, n_micro: int) -> float:
+    """The canonical pipeline bubble fraction ``(S-1)/(S-1+M)``: each
+    stage idles S-1 of S-1+M forward (and backward) slots while the
+    pipe fills and drains."""
+    return (n_stages - 1) / (n_stages - 1 + n_micro)
+
+
+@dataclass(frozen=True)
+class PipeTick:
+    """One lockstep tick of the SPMD schedule.
+
+    ``fwd``/``bwd`` say which op slots exist in this tick's program (a
+    static property — every rank executes the same trace).  Whether the
+    slot carries a REAL microbatch on a given rank is data-dependent:
+    ``fwd_base``/``bwd_base`` give the microbatch index as an affine
+    function of the stage index (``mb = base - coef*s``, valid when the
+    parity gate passes and 0 <= mb < M).  ``emit`` is the (static)
+    index of the microbatch whose loss pieces the LAST stage produces
+    this tick, or None.
+    """
+
+    fwd: bool
+    bwd: bool
+    fwd_base: int = 0
+    fwd_coef: int = 1
+    fwd_div2: bool = False
+    bwd_base: int = 0
+    bwd_coef: int = -1
+    bwd_div2: bool = False
+    emit: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PipeSchedule:
+    """A static tick table for ``n_stages`` x ``n_micro`` (see
+    :func:`make_schedule`)."""
+
+    kind: str                     # "gpipe" | "1f1b"
+    n_stages: int
+    n_micro: int
+    ticks: Tuple[PipeTick, ...]
+    buffer_depth: int             # in-flight stage inputs kept per rank
+
+    def _mb(self, tick: PipeTick, s: int, fwd: bool) -> Optional[int]:
+        base, coef, div2 = (tick.fwd_base, tick.fwd_coef, tick.fwd_div2) \
+            if fwd else (tick.bwd_base, tick.bwd_coef, tick.bwd_div2)
+        t = base - coef * s if fwd else base + coef * s
+        if div2:
+            if t % 2 != 0:
+                return None
+            t //= 2
+        return t if 0 <= t < self.n_micro else None
+
+    def fwd_mb_static(self, tick: PipeTick, s: int) -> Optional[int]:
+        """Concrete fwd microbatch index for stage ``s`` (None = idle);
+        the python-side mirror of the traced executor arithmetic, used
+        for bubble accounting and tests."""
+        return self._mb(tick, s, True) if tick.fwd else None
+
+    def bwd_mb_static(self, tick: PipeTick, s: int) -> Optional[int]:
+        return self._mb(tick, s, False) if tick.bwd else None
+
+    @property
+    def n_ticks(self) -> int:
+        return len(self.ticks)
+
+    @property
+    def n_transfer_ticks(self) -> Tuple[int, int]:
+        """(forward, backward) ppermute count per step."""
+        return (sum(1 for t in self.ticks if t.fwd),
+                sum(1 for t in self.ticks if t.bwd))
+
+    def bubble_fraction(self) -> float:
+        """Idle fraction measured from the tick table: op slots with no
+        valid microbatch on their rank / total op slots.  Equals
+        :func:`analytic_bubble` for both shipped schedules (1F1B wins
+        on *memory* — ``buffer_depth`` — not on bubble)."""
+        busy = idle = 0
+        for tick in self.ticks:
+            for s in range(self.n_stages):
+                slots = []
+                if tick.fwd:
+                    slots.append(self.fwd_mb_static(tick, s))
+                if tick.bwd:
+                    slots.append(self.bwd_mb_static(tick, s))
+                if self.kind == "1f1b":
+                    # phase-interleaved: each rank has ONE op slot per
+                    # wall tick (the parity-passing one)
+                    busy += sum(1 for m in slots if m is not None)
+                    idle += 1 - sum(1 for m in slots if m is not None)
+                else:
+                    for m in slots:
+                        busy += m is not None
+                        idle += m is None
+        return idle / max(1, busy + idle)
+
+
+def make_schedule(kind: str, n_stages: int, n_micro: int) -> PipeSchedule:
+    """Build the GPipe or 1F1B tick table for S stages and M microbatches.
+
+    GPipe: ``T = M+S-1`` forward ticks (stage s runs microbatch ``t-s``)
+    then T backward ticks (stage s replays microbatch ``M-1-u+(S-1-s)``,
+    so cotangents flow upstream one stage per tick).
+
+    1F1B: ``2(M+S-1)`` wall ticks; stage s forwards microbatch i at tick
+    ``2i+s`` and backwards microbatch j at tick ``2j+2S-1-s`` — adjacent
+    stages run at opposite phase, which is exactly what bounds in-flight
+    activations at ``min(S, M)`` instead of GPipe's M.
+    """
+    S, M = n_stages, n_micro
+    if S < 1 or M < 1:
+        raise ValueError(f"need n_stages>=1 and n_micro>=1, got {S}, {M}")
+    ticks: List[PipeTick] = []
+    if kind == "gpipe":
+        T = M + S - 1
+        for t in range(T):
+            e = t - (S - 1)
+            ticks.append(PipeTick(fwd=True, bwd=False, fwd_base=t,
+                                  fwd_coef=1,
+                                  emit=e if 0 <= e < M else None))
+        for u in range(T):
+            # stage s: j = (M-1-u) + (S-1-s)  =>  base + (-1)*s form
+            ticks.append(PipeTick(fwd=False, bwd=True,
+                                  bwd_base=M - 1 - u + S - 1, bwd_coef=-1))
+        depth = M
+    elif kind == "1f1b":
+        for w in range(2 * (M + S - 1)):
+            e = w - (S - 1)
+            e = e // 2 if (e % 2 == 0 and 0 <= e // 2 < M) else None
+            ticks.append(PipeTick(
+                fwd=True, bwd=True,
+                fwd_base=w, fwd_coef=1, fwd_div2=True,
+                bwd_base=w - (2 * S - 1), bwd_coef=1, bwd_div2=True,
+                emit=e))
+        depth = min(S, M)
+    else:
+        raise ValueError(f"unknown pp schedule {kind!r}; "
+                         f"known: gpipe, 1f1b")
+    return PipeSchedule(kind, S, M, tuple(ticks), depth)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage param partitioning
+# ---------------------------------------------------------------------------
+
+
+def stage_param_leaf_indices(abstract_params) -> Tuple[int, ...]:
+    """Flat-leaf indices of the STAGE-LOCAL params: everything under the
+    top-level ``groups`` key (the scan-stacked block weights, leading
+    dim = n_layers, sharded over ``pipe``).  Everything else — embed,
+    final norm, mlm head — is replicated across pipe ranks and synced
+    with a ``pipe``-inclusive psum."""
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    out = []
+    for idx, (path, _) in enumerate(flat):
+        head = getattr(path[0], "key", getattr(path[0], "idx", None))
+        if head == "groups":
+            out.append(idx)
+    return tuple(out)
+
+
+def stage_param_specs(abstract_params, pipe_axis: str = PIPE_AXIS):
+    """Per-leaf ``PartitionSpec`` tree of the pipeline state layout:
+    block-stack leaves split over ``pipe`` on their leading (layers)
+    dim, every other leaf replicated.  Used both as the ``shard_map``
+    in/out specs of the staged step and (as ``NamedSharding``) for the
+    runner's state placement — shared builder, same reason as
+    ``ParallelPlan.scatter_param_specs``."""
+    from jax.sharding import PartitionSpec as P
+
+    stage = set(stage_param_leaf_indices(abstract_params))
+    flat, treedef = jax.tree_util.tree_flatten(abstract_params)
+    specs = [P(pipe_axis) if i in stage else P()
+             for i in range(len(flat))]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Gradient sync (composes with the ddp bucket machinery)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PipeSyncPlan:
+    """Bucket layout for the pipeline step's gradient sync.
+
+    ``stage`` buckets hold stage-local (pipe-sharded) leaves — synced
+    with ``gradsync.bucketed_psum`` over the DATA axes only (each pipe
+    rank owns a distinct stage slice).  ``replicated`` buckets hold the
+    embed/norm/head leaves every rank computes (masked) gradients for —
+    synced over ``(pipe,) + data`` so the first/last stage's
+    contributions reach everyone.
+    """
+
+    stage: Tuple[gradsync.GradBucket, ...]
+    replicated: Tuple[gradsync.GradBucket, ...]
+    stage_indices: Tuple[int, ...]
+
+    @property
+    def buckets(self) -> Tuple[gradsync.GradBucket, ...]:
+        return self.stage + self.replicated
+
+    @property
+    def stage_bytes(self) -> int:
+        return sum(b.nbytes for b in self.stage)
+
+    @property
+    def replicated_bytes(self) -> int:
+        return sum(b.nbytes for b in self.replicated)
+
+
+def partition_pipe_buckets(leaves: Sequence[Any],
+                           stage_indices: Sequence[int], *,
+                           bucket_mb: float = gradsync.DEFAULT_BUCKET_MB
+                           ) -> PipeSyncPlan:
+    """Split grad leaves into stage-local vs replicated bucket groups,
+    both keeping the reverse-layer walk of ``partition_buckets``.
+    ``leaves`` must be STAGE-LOCAL shapes (layers dim already divided by
+    the stage count) so bucket sizes reflect what actually crosses the
+    wire."""
+    st = set(stage_indices)
+    sc = [i for i in range(len(leaves)) if i in st]
+    rp = [i for i in range(len(leaves)) if i not in st]
+    remap = lambda b, orig: gradsync.GradBucket(
+        tuple(orig[i] for i in b.indices), b.nbytes, b.dtype)
+    stage = tuple(
+        remap(b, sc) for b in gradsync.partition_buckets(
+            [leaves[i] for i in sc], bucket_mb=bucket_mb)) if sc else ()
+    rep = tuple(
+        remap(b, rp) for b in gradsync.partition_buckets(
+            [leaves[i] for i in rp], bucket_mb=bucket_mb)) if rp else ()
+    return PipeSyncPlan(stage, rep, tuple(sc))
+
+
+def pipe_grad_sync(grads, sp: PipeSyncPlan, pipe_axis: str,
+                   dp_axes: Tuple[str, ...]):
+    """Sum pipeline grads to their global values: stage buckets over the
+    data axes (skipped entirely when there is no data parallelism),
+    replicated buckets over ``(pipe,) + data``.  Must run inside
+    ``shard_map``; reuses ``bucketed_psum`` so the per-bucket overlap
+    property carries over unchanged."""
+    if dp_axes:
+        grads = gradsync.bucketed_psum(
+            grads, dp_axes if len(dp_axes) > 1 else dp_axes[0], sp.stage)
+    all_axes = (pipe_axis,) + tuple(dp_axes)
+    return gradsync.bucketed_psum(grads, all_axes, sp.replicated)
+
+
+def pipe_global_norm(grads, sp: PipeSyncPlan, pipe_axis: str) -> jnp.ndarray:
+    """Global L2 norm of a synced pipeline grad tree: stage leaves are
+    disjoint slices across pipe ranks (psum their squared sums over
+    ``pipe``); replicated leaves are identical everywhere and counted
+    once.  Call AFTER :func:`pipe_grad_sync` (data-axis sums applied)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    st = set(sp.stage_indices)
+    sq = lambda x: jnp.sum(jnp.square(x.astype(jnp.float32)))
+    sq_stage = sum((sq(l) for i, l in enumerate(leaves) if i in st),
+                   jnp.zeros((), jnp.float32))
+    sq_rep = sum((sq(l) for i, l in enumerate(leaves) if i not in st),
+                 jnp.zeros((), jnp.float32))
+    return jnp.sqrt(jax.lax.psum(sq_stage, pipe_axis) + sq_rep)
+
+
+def activation_wire_bytes(sched: PipeSchedule, micro_shape: Tuple[int, ...],
+                          dtype) -> Dict[str, float]:
+    """Per-step activation-transfer telemetry: one ``ppermute`` payload
+    is a (microbatch, seq, d_model) boundary activation; forward ticks
+    move it downstream, backward ticks move the cotangent upstream.
+    ``wire_bytes_per_device`` averages over ranks (the last stage sends
+    no forward payload, the first no backward)."""
+    payload = float(np.prod(micro_shape)) * jnp.dtype(dtype).itemsize
+    n_fwd, n_bwd = sched.n_transfer_ticks
+    S = sched.n_stages
+    frac = (S - 1) / S if S else 0.0
+    return {
+        "act_payload_bytes": payload,
+        "act_transfers": n_fwd + n_bwd,
+        "act_wire_bytes_per_device": payload * (n_fwd + n_bwd) * frac,
+    }
+
+
+# ---------------------------------------------------------------------------
+# The staged executor
+# ---------------------------------------------------------------------------
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: x + y.astype(x.dtype), a, b)
+
+
+def pipeline_grads(sched: PipeSchedule, params, batch, *,
+                   stage_fwd: Callable, stage_loss: Callable,
+                   act_shape: Tuple[int, ...], act_dtype,
+                   pipe_axis: str = PIPE_AXIS,
+                   dp_axes: Tuple[str, ...] = ()):
+    """Run one pipelined forward+backward; must be called INSIDE
+    ``shard_map`` over a mesh carrying ``pipe_axis``.
+
+    ``stage_fwd(params, x_recv, mb, is_first)`` maps a received
+    boundary activation (or, on the first stage, the embedded
+    microbatch tokens — selected by the traced ``is_first``) through
+    this rank's block slice.  ``stage_loss(params, y, mb)`` returns
+    ``(nll_sum, correct_sum, token_count)`` for a stage output — only
+    the last stage's values are real; everything else is masked.
+
+    Returns ``(loss, grads, metrics)``; ``grads`` are this rank's
+    UNSYNCED per-device gradients (stage slice + masked replicated
+    leaves) — pass them to :func:`pipe_grad_sync`.  ``loss`` and
+    ``metrics`` are already global (per-microbatch global denominators,
+    averaged over microbatches — the exact semantics of
+    ``core.accum.accumulate_grads`` over the same split).
+    """
+    S, M = sched.n_stages, sched.n_micro
+    s_idx = jax.lax.axis_index(pipe_axis)
+    is_first = s_idx == 0
+    is_last = s_idx == S - 1
+    all_axes = (pipe_axis,) + tuple(dp_axes)
+    down = [(i, i + 1) for i in range(S - 1)]
+    up = [(i + 1, i) for i in range(S - 1)]
+
+    micro = jax.tree_util.tree_map(
+        lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+
+    def mb_at(i):
+        i = jnp.clip(i, 0, M - 1)
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, i, 0,
+                                                   keepdims=False), micro)
+
+    def tick_mb(tick: PipeTick, fwd: bool):
+        """Traced (mb_index, valid) for this rank at one tick."""
+        if fwd:
+            t = tick.fwd_base - tick.fwd_coef * s_idx
+            div2 = tick.fwd_div2
+        else:
+            t = tick.bwd_base + tick.bwd_coef * s_idx
+            div2 = tick.bwd_div2
+        valid = jnp.ones((), bool)
+        if div2:
+            valid = (t % 2) == 0
+            t = t // 2
+        valid = valid & (t >= 0) & (t < M)
+        return t, valid
+
+    D = sched.buffer_depth
+    x_buf = jnp.zeros((D,) + tuple(act_shape), act_dtype)
+    # per-microbatch GLOBAL (psum'd) loss pieces, filled as the last
+    # stage emits each microbatch: [nll, correct, tokens]
+    piece_buf = jnp.zeros((M, 3), jnp.float32)
+    y_send = jnp.zeros(tuple(act_shape), act_dtype)
+    dx_send = jnp.zeros(tuple(act_shape), act_dtype)
+    grads = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    w_last = jnp.where(is_last, 1.0, 0.0)
+
+    for tick in sched.ticks:
+        if tick.fwd:
+            x_recv = jax.lax.ppermute(y_send, pipe_axis, down) if S > 1 \
+                else y_send
+            i, fvalid = tick_mb(tick, fwd=True)
+            mb = mb_at(i)
+            y = stage_fwd(params, x_recv, mb, is_first)
+            slot = jnp.clip(i, 0, M - 1) % D
+            old = jax.lax.dynamic_index_in_dim(x_buf, slot, 0,
+                                               keepdims=False)
+            x_buf = jax.lax.dynamic_update_index_in_dim(
+                x_buf, jnp.where(fvalid, x_recv, old), slot, 0)
+            y_send = y
+            if tick.emit is not None:
+                nll, acc, den = stage_loss(params, y, mb)
+                vec = jax.lax.psum(
+                    jnp.stack([nll, acc, den]).astype(jnp.float32)
+                    * w_last, all_axes)
+                piece_buf = piece_buf.at[tick.emit].set(vec)
+        if tick.bwd:
+            dy_recv = jax.lax.ppermute(dx_send, pipe_axis, up) if S > 1 \
+                else dx_send
+            j, bvalid = tick_mb(tick, fwd=False)
+            jc = jnp.clip(j, 0, M - 1)
+            slot = jc % D
+            x_old = jax.lax.dynamic_index_in_dim(x_buf, slot, 0,
+                                                 keepdims=False)
+            mbj = mb_at(j)
+            den_j = jax.lax.dynamic_index_in_dim(piece_buf[:, 2], jc, 0,
+                                                 keepdims=False)
+            den_inv = 1.0 / jnp.maximum(den_j, 1.0)
+
+            def fb(p, x):
+                yy = stage_fwd(p, x, mbj, is_first)
+                nll, _, _ = stage_loss(p, yy, mbj)
+                return yy, nll * den_inv * (1.0 / M)
+
+            _, pull = jax.vjp(fb, params, x_old)
+            bvalid_f = jnp.where(bvalid, 1.0, 0.0)
+            dpiece = (w_last * bvalid_f).astype(jnp.float32)
+            dy = (dy_recv * bvalid_f.astype(dy_recv.dtype))
+            dparams, dx = pull((dy, dpiece))
+            grads = _tree_add(grads, dparams)
+            dx_send = dx * bvalid_f.astype(dx.dtype)
+
+    den = jnp.maximum(piece_buf[:, 2], 1.0)
+    per_mb_xent = piece_buf[:, 0] / den
+    loss = jnp.mean(per_mb_xent)
+    metrics = {
+        "xent": loss,
+        "acc": jnp.mean(piece_buf[:, 1] / den),
+        "tokens": jnp.mean(piece_buf[:, 2]),
+        "aux_loss": jnp.zeros((), jnp.float32),
+        "loss": loss,
+    }
+    return loss, grads, metrics

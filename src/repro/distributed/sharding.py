@@ -4,6 +4,9 @@
 ``gradsync``, ``train/runner``, the launchers — uses these names):
 
   ``pod``    leading DCN axis of a multi-pod mesh; pure data parallelism.
+  ``pipe``   the pipeline axis: the block stack is cut into contiguous
+             stages, one per ``pipe`` coordinate, and microbatches
+             stream through (``distributed/pipeline.py``).
   ``data``   the data-parallel / ZeRO axis inside a pod: batches shard
              over it in every mode, params + optimizer state shard over
              it under fsdp (``scatter_overlap``).
@@ -17,6 +20,11 @@ Modes (DESIGN.md §5; full treatment in ``docs/parallelism.md``):
              analogue); batch over ("pod","data").
   tp       — Megatron-style tensor parallelism over "model" (serving).
   fsdp_tp  — both (default for >=7B training).
+  pp       — pipeline parallelism alone: stages over "pipe", whole
+             batch per stage column.
+  pp_dp    — pipeline x data: stages over "pipe", batch sharded over
+             ("pod","data") within each stage; within-stage gradient
+             sync reuses the ddp bucket machinery.
 
 Rules are *candidate lists*: the first mesh axis that (a) exists, (b) is not
 already used by another dim of the same tensor and (c) divides the dim size
@@ -35,8 +43,8 @@ from jax.sharding import PartitionSpec as P
 
 __all__ = [
     "ParallelPlan",
-    "GRAD_SYNC_BUCKETED", "GRAD_SYNC_SCATTER", "GRAD_SYNC_XLA",
-    "GRAD_SYNC_NONE",
+    "GRAD_SYNC_BUCKETED", "GRAD_SYNC_SCATTER", "GRAD_SYNC_PIPE",
+    "GRAD_SYNC_XLA", "GRAD_SYNC_NONE",
     "RULES", "spec_for", "tree_shardings", "batch_axes", "batch_spec",
     "activation_sharding", "shard_map", "optimization_barrier",
     "local_batch_size", "process_batch_slice",
@@ -133,6 +141,11 @@ RULES: Dict[str, Dict[str, Tuple[Candidate, ...]]] = {
     "fsdp": dict(_FSDP),
     "tp": dict(_TP),
     "fsdp_tp": {**_FSDP, **_TP},
+    # pipeline modes: no logical-axis rules — the block stack is sharded
+    # over 'pipe' EXPLICITLY (ParallelPlan.pipe_param_specs); everything
+    # else is replicated, exactly like ddp within a stage
+    "pp": {},
+    "pp_dp": {},
 }
 
 
@@ -201,6 +214,12 @@ def batch_axes(mesh: Mesh, global_batch: int, mode: str) -> Tuple[str, ...]:
     """Largest prefix of the DP axis list that divides the global batch."""
     if mode == "ddp":
         prefer = [a for a in ("pod", "data", "model") if a in mesh.axis_names]
+    elif mode in ("pp", "pp_dp"):
+        # module-level callers see the pp FALLBACK semantics (pipelining
+        # off: 'pipe' demoted to a plain data axis).  An ENGAGED pipeline
+        # plan computes its dp axes over ("pod","data") only, inside
+        # ParallelPlan.make — batch replicates across stages there.
+        prefer = [a for a in ("pod", "pipe", "data") if a in mesh.axis_names]
     else:
         prefer = [a for a in ("pod", "data") if a in mesh.axis_names]
     chosen: list = []
@@ -450,12 +469,18 @@ def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
 #                      (param prefetch) and one psum_scatter per bucket in
 #                      reverse-layer order during backward (grad wire
 #                      bytes halve vs the ddp all-reduce)
+#   pipe_overlap     — pp/pp_dp: the staged microbatch pipeline
+#                      (distributed/pipeline.py); block stack sharded
+#                      over 'pipe', activations/cotangents move by
+#                      ppermute, within-stage grads reuse bucketed_psum
+#                      over the data axes
 #   xla_fused        — the partitioner inserts collectives from the sharded
 #                      param/grad specs (tp, and every fallback: MoE,
 #                      indivisible microbatch, tp-sharded leaves)
 #   none             — single data-parallel shard: nothing to synchronize
 GRAD_SYNC_BUCKETED = "bucketed_overlap"
 GRAD_SYNC_SCATTER = "scatter_overlap"
+GRAD_SYNC_PIPE = "pipe_overlap"
 GRAD_SYNC_XLA = "xla_fused"
 GRAD_SYNC_NONE = "none"
 
@@ -480,7 +505,7 @@ class ParallelPlan:
     so a plan can be closed over by traced functions.
     """
 
-    mode: str                      # ddp | fsdp | tp | fsdp_tp
+    mode: str                      # ddp | fsdp | tp | fsdp_tp | pp | pp_dp
     mesh: Optional[Mesh] = None
     global_batch: int = 0
     grad_bucket_mb: float = 25.0
@@ -488,43 +513,89 @@ class ParallelPlan:
                                    # (xla_fused) for ddp AND fsdp modes
     microbatch: int = 1            # grad-accumulation count (the overlap
                                    # paths split the LOCAL shard into
-                                   # microbatches)
+                                   # microbatches; under pp modes this is
+                                   # the PIPELINE microbatch count M)
     has_moe: bool = False          # MoE aux loss needs global-batch
                                    # router statistics: see grad_sync
+    donate_gather: bool = True     # scatter_overlap: free the gathered
+                                   # full-param buffers after forward and
+                                   # re-gather in backward (remat of the
+                                   # per-bucket all_gathers) — peak
+                                   # memory drops by ~the full param
+                                   # tree at the cost of 2x gather wire;
+                                   # fsdp_overlap reports the delta
+    pp_schedule: str = "1f1b"      # gpipe | 1f1b (pp modes only)
+    n_layers: int = 0              # depth of the block stack (pp modes:
+                                   # must divide by the pipe axis)
+    stageable: bool = True         # model structure admits equal SPMD
+                                   # stages (pipeline.stage_compatible)
     _dp_axes: Tuple[str, ...] = field(default=())
+    _pipe_ok: bool = field(default=False)
 
     @classmethod
     def make(cls, mesh: Optional[Mesh], mode: str, global_batch: int, *,
              grad_bucket_mb: float = 25.0, overlap: bool = True,
-             microbatch: int = 1, has_moe: bool = False) -> "ParallelPlan":
+             microbatch: int = 1, has_moe: bool = False,
+             donate_gather: bool = True,
+             pp_schedule: str = "1f1b", n_layers: int = 0,
+             stageable: bool = True) -> "ParallelPlan":
         """Build a plan for one (mesh, mode, global_batch) triple.
 
         ``overlap=False`` pins the fused ``xla_fused`` baseline (the knob
         the grad_overlap/fsdp_overlap benchmarks flip); ``microbatch``
         and ``has_moe`` feed the fallback predicate of
-        :attr:`grad_sync`.  Raises ``KeyError`` on an unknown mode.
+        :attr:`grad_sync`.  For the pipeline modes, ``n_layers`` /
+        ``stageable`` / ``pp_schedule`` feed the static engagement test
+        (:attr:`pipe_engaged`); when pipelining cannot engage, ``pipe``
+        is demoted to a plain data axis and the ddp dispatch applies.
+        Raises ``KeyError`` on an unknown mode.
         """
         if mode not in RULES:
             raise KeyError(f"unknown sharding mode {mode!r}; "
                            f"known: {sorted(RULES)}")
-        dp = batch_axes(mesh, global_batch, mode) if mesh is not None \
-            else ()
+        microbatch = max(1, microbatch)
+        pipe_ok = False
+        if mode in ("pp", "pp_dp") and mesh is not None:
+            pp = mesh.shape["pipe"] if "pipe" in mesh.axis_names else 1
+            # batch axes of an ENGAGED pipeline: the ("pod","data")
+            # prefix — batch replicates across stages
+            dp = batch_axes(mesh, global_batch, "fsdp")
+            dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp \
+                else 1
+            local = global_batch // dp_size
+            pipe_ok = (pp > 1 and overlap and stageable and not has_moe
+                       and n_layers > 0 and n_layers % pp == 0
+                       and local % microbatch == 0
+                       and local >= microbatch)
+        if not pipe_ok:
+            dp = batch_axes(mesh, global_batch, mode) if mesh is not None \
+                else ()
         return cls(mode=mode, mesh=mesh, global_batch=global_batch,
                    grad_bucket_mb=grad_bucket_mb, overlap=overlap,
-                   microbatch=max(1, microbatch), has_moe=has_moe,
-                   _dp_axes=dp)
+                   microbatch=microbatch, has_moe=has_moe,
+                   donate_gather=donate_gather,
+                   pp_schedule=pp_schedule, n_layers=n_layers,
+                   stageable=stageable, _dp_axes=dp, _pipe_ok=pipe_ok)
 
     @classmethod
     def for_run(cls, run, mesh: Optional[Mesh], *,
                 grad_bucket_mb: float = 25.0,
-                overlap: bool = True) -> "ParallelPlan":
+                overlap: bool = True,
+                donate_gather: bool = True) -> "ParallelPlan":
         """Plan derived from a ``RunConfig`` (mode, global batch,
-        microbatch count, MoE-ness all read off ``run``)."""
+        microbatch count, MoE-ness, layer depth and stage compatibility
+        all read off ``run``)."""
+        from repro.distributed.pipeline import stage_compatible
+
         return cls.make(mesh, run.sharding, run.shape.global_batch,
                         grad_bucket_mb=grad_bucket_mb,
                         overlap=overlap,
+                        donate_gather=donate_gather,
                         microbatch=run.microbatch or 1,
-                        has_moe=run.model.moe is not None)
+                        has_moe=run.model.moe is not None,
+                        pp_schedule=getattr(run, "pp_schedule", "1f1b"),
+                        n_layers=run.model.n_layers,
+                        stageable=stage_compatible(run.model)[0])
 
     # -- axes ------------------------------------------------------------
     @property
@@ -547,15 +618,51 @@ class ParallelPlan:
             return "model"
         return None
 
+    # -- pipeline axis ---------------------------------------------------
+    @property
+    def pipe_engaged(self) -> bool:
+        """True when this plan actually pipelines: a pp mode on a mesh
+        with a >1 ``pipe`` axis, a stage-divisible block stack, no MoE,
+        and a microbatch count that divides the per-shard batch.  When
+        False the pp modes demote ``pipe`` to a plain data axis and the
+        ddp dispatch below applies (see docs/parallelism.md)."""
+        return self._pipe_ok
+
+    @property
+    def pp_size(self) -> int:
+        """Pipeline stage count (1 when not pipelining)."""
+        if not self._pipe_ok:
+            return 1
+        return self.mesh.shape["pipe"]
+
+    @property
+    def pipe_axis(self) -> Optional[str]:
+        return "pipe" if self._pipe_ok else None
+
+    @property
+    def n_micro(self) -> int:
+        """Pipeline microbatch count M (the grad-accumulation split)."""
+        return max(1, self.microbatch)
+
+    @property
+    def stage_layers(self) -> int:
+        """Blocks per stage (the whole stack when not pipelining)."""
+        return self.n_layers // self.pp_size if self.n_layers else 0
+
     # -- specs -----------------------------------------------------------
     @property
     def rules(self) -> Dict[str, Tuple[Candidate, ...]]:
         return RULES[self.mode]
 
     def batch_spec(self, ndim: int = 2) -> P:
+        # built from the plan's OWN dp axes (not the module-level
+        # recompute): an engaged pipeline shards the batch over
+        # ("pod","data") only and replicates it across stages
         if self.mesh is None:
             return P(*([None] * ndim))
-        return batch_spec(self.mesh, self.global_batch, self.mode, ndim)
+        ax = self._dp_axes
+        lead = ax if len(ax) != 1 else ax[0]
+        return P(lead if ax else None, *([None] * (ndim - 1)))
 
     def tree_shardings(self, axes_tree, shape_tree,
                        drop_axes: Tuple[str, ...] = ()):
@@ -601,15 +708,20 @@ class ParallelPlan:
         shard would change the load-balancing pressure from global to
         per-replica (and break sum-of-local-grads == global-grad); the
         pjit path computes it over the global batch.  fsdp_tp falls back
-        when :attr:`tp_sharded` (see there).  The full mode x condition
-        table lives in ``docs/parallelism.md`` and is asserted in
+        when :attr:`tp_sharded` (see there).  The pp modes return
+        ``pipe_overlap`` when :attr:`pipe_engaged`; otherwise ``pipe``
+        has been demoted to a data axis (see :meth:`make`) and they
+        dispatch exactly like ddp.  The full mode x condition table
+        lives in ``docs/parallelism.md`` and is asserted in
         ``tests/test_gradsync.py``."""
+        if self._pipe_ok:
+            return GRAD_SYNC_PIPE
         if self.mesh is None or self.dp_size <= 1:
             return GRAD_SYNC_NONE
         divisible = self.local_batch % self.microbatch == 0 \
             and self.local_batch >= self.microbatch
         if self.overlap and not self.has_moe and divisible:
-            if self.mode == "ddp":
+            if self.mode in ("ddp", "pp", "pp_dp"):
                 return GRAD_SYNC_BUCKETED
             if self.mode in ("fsdp", "fsdp_tp") and not self.tp_sharded:
                 return GRAD_SYNC_SCATTER
@@ -675,9 +787,56 @@ class ParallelPlan:
 
         return jax.tree_util.tree_map(one, abstract_params)
 
+    # -- pipeline layout -------------------------------------------------
+    def pipe_param_specs(self, abstract_params):
+        """Per-leaf ``PartitionSpec`` tree of the pipeline state layout
+        (block stack over ``pipe`` on the leading layers dim, everything
+        else replicated); None for non-pipeline plans.  Shared between
+        the staged step's shard_map specs and the runner's state
+        placement — same single-builder rule as
+        :meth:`scatter_param_specs`."""
+        if not self._pipe_ok:
+            return None
+        from repro.distributed import pipeline
+
+        return pipeline.stage_param_specs(abstract_params)
+
+    def pipe_sync_plan(self, abstract_params):
+        """The :class:`~repro.distributed.pipeline.PipeSyncPlan` of a
+        ``pipe_overlap`` run: stage-local vs replicated grad buckets,
+        sized at the STAGE-LOCAL f32 accumulator shapes (the executor
+        always accumulates grads in f32), or None otherwise."""
+        if not self._pipe_ok:
+            return None
+        import jax.numpy as jnp
+
+        from repro.distributed import pipeline
+
+        stage = set(pipeline.stage_param_leaf_indices(abstract_params))
+        S = self.pp_size
+        leaves = []
+        for i, l in enumerate(jax.tree_util.tree_leaves(abstract_params)):
+            shape = tuple(l.shape)
+            if i in stage:
+                shape = (shape[0] // S,) + shape[1:]
+            leaves.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+        return pipeline.partition_pipe_buckets(
+            leaves, sorted(stage & set(range(len(leaves)))),
+            bucket_mb=self.grad_bucket_mb)
+
+    def pipe_schedule_obj(self):
+        """The static :class:`~repro.distributed.pipeline.PipeSchedule`
+        tick table of this plan, or None when not pipelining."""
+        if not self._pipe_ok:
+            return None
+        from repro.distributed import pipeline
+
+        return pipeline.make_schedule(self.pp_schedule, self.pp_size,
+                                      self.n_micro)
+
     def describe(self) -> Dict[str, Any]:
         """Flat summary for logs / telemetry."""
-        return {
+        out = {
             "mode": self.mode,
             "dp_axes": list(self._dp_axes),
             "dp_size": self.dp_size,
@@ -687,3 +846,9 @@ class ParallelPlan:
             "grad_sync": self.grad_sync,
             "grad_bucket_mb": self.grad_bucket_mb,
         }
+        if self.mode in ("pp", "pp_dp"):
+            out.update(pp_stages=self.pp_size,
+                       pp_schedule=self.pp_schedule if self._pipe_ok
+                       else None,
+                       pipe_engaged=self._pipe_ok)
+        return out

@@ -20,12 +20,27 @@ def _make_mesh(shape, axes):
     return jax.make_mesh(shape, axes)
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False,
+                         pipeline_stages: int = 0):
+    """The 256-chip pod mesh (16x16 data x model), optionally with a
+    leading ``pod`` DCN axis (2 pods) and/or a ``pipe`` axis carved out
+    of the data dimension (``pipeline_stages`` stages; the per-stage dp
+    width shrinks by the same factor, total chips unchanged)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipeline_stages and pipeline_stages > 1:
+        s = pipeline_stages
+        if 16 % s != 0:
+            raise ValueError(
+                f"pipeline_stages={s} must divide the 16-wide data axis")
+        shape = (s,) + shape[:-2] + (shape[-2] // s, shape[-1])
+        axes = ("pipe",) + axes
     return _make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (virtual) devices exist — tests."""
+def make_host_mesh(data: int = 1, model: int = 1, pipe: int = 0):
+    """Small mesh over however many (virtual) devices exist — tests.
+    ``pipe > 0`` prepends the pipeline axis: ``(pipe, data, model)``."""
+    if pipe and pipe > 0:
+        return _make_mesh((pipe, data, model), ("pipe", "data", "model"))
     return _make_mesh((data, model), ("data", "model"))

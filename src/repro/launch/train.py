@@ -77,10 +77,26 @@ def main():
                     help="prune committed checkpoints beyond the newest "
                          "K after each save (0 = keep all)")
     ap.add_argument("--sharding", default="ddp",
-                    choices=["ddp", "fsdp", "tp", "fsdp_tp"],
+                    choices=["ddp", "fsdp", "tp", "fsdp_tp", "pp",
+                             "pp_dp"],
                     help="parallelism mode; ddp replicates params, fsdp "
                          "shards params+optimizer over the data axis "
-                         "(scatter_overlap; see docs/parallelism.md)")
+                         "(scatter_overlap), pp/pp_dp pipeline the "
+                         "block stack (see docs/parallelism.md)")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="cut the block stack into N pipeline stages "
+                         "over a 'pipe' mesh axis (implies --sharding "
+                         "pp_dp unless a pp mode was given); devices "
+                         "must divide by N")
+    ap.add_argument("--pp-schedule", default="1f1b",
+                    choices=["gpipe", "1f1b"],
+                    help="pipeline microbatch schedule: gpipe holds M "
+                         "microbatches in flight, 1f1b bounds them at "
+                         "the stage count (same bubble)")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="grad-accumulation split of the local batch; "
+                         "under pp modes this is the pipeline "
+                         "microbatch count M (0 = no split)")
     ap.add_argument("--grad-bucket-mb", type=float, default=25.0,
                     help="gradient collective bucket size (MB); one "
                          "psum (ddp) or psum_scatter+all_gather (fsdp) "
@@ -152,18 +168,37 @@ def main():
     # multi-host path (--process-count without a coordinator) keeps each
     # process training independently on its own slice, as before
     gbatch = args.batch * jax.process_count()
+    sharding = args.sharding
+    if args.pipeline_stages > 1 and sharding not in ("pp", "pp_dp"):
+        sharding = "pp_dp"
+    if sharding in ("pp", "pp_dp") and args.pipeline_stages < 2:
+        # without a pipe axis the plan would silently demote to plain
+        # ddp — make the mismatch loud instead
+        ap.error(f"--sharding {sharding} needs --pipeline-stages >= 2")
     run = default_run_config(cfg, ShapeConfig("cli", args.seq, gbatch,
                                               "train"),
-                             sharding=args.sharding)
+                             sharding=sharding,
+                             pp_schedule=args.pp_schedule,
+                             microbatch=args.microbatch)
     opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
                       total_steps=args.steps)
 
-    # data-parallel mesh over whatever devices exist (all processes' under
+    # mesh over whatever devices exist (all processes' under
     # jax.distributed): the runner jits ONCE with explicit state/batch
     # shardings + donated state buffers, and its ParallelPlan picks the
-    # gradient-sync strategy (bucketed overlapped psum for multi-shard ddp)
+    # gradient-sync strategy (bucketed overlapped psum for multi-shard
+    # ddp; the staged pipeline when --pipeline-stages carves a pipe axis)
     n_dev = jax.device_count()
-    mesh = make_host_mesh(data=n_dev if gbatch % n_dev == 0 else 1)
+    if args.pipeline_stages > 1:
+        stages = args.pipeline_stages
+        if n_dev % stages != 0:
+            ap.error(f"--pipeline-stages {stages} must divide the "
+                     f"device count {n_dev}")
+        dp = n_dev // stages
+        mesh = make_host_mesh(data=dp if gbatch % max(1, dp) == 0 else 1,
+                              pipe=stages)
+    else:
+        mesh = make_host_mesh(data=n_dev if gbatch % n_dev == 0 else 1)
     runner = StepRunner(model, run, opt, mesh,
                         grad_bucket_mb=args.grad_bucket_mb)
     gs = runner.grad_sync_info()
@@ -173,6 +208,14 @@ def main():
           f"comm={gs['comm_bytes']/1e6:.1f}MB/step "
           f"wire={gs['wire_bytes_per_device']/1e6:.1f}MB/dev "
           f"gather={gs['param_gather_bytes']/1e6:.1f}MB")
+    if gs.get("pipe_engaged"):
+        print(f"[plan] pipeline: stages={gs['pp_stages']} "
+              f"schedule={gs['pp_schedule']} "
+              f"micro={gs['microbatch']} "
+              f"bubble={gs['bubble_fraction']:.3f} "
+              f"(analytic {gs['bubble_analytic']:.3f}) "
+              f"act_wire={gs['act_wire_bytes_per_device']/1e6:.1f}MB/dev "
+              f"buffer_depth={gs['pp_buffer_depth']}")
 
     if args.workers == 0:
         # R3 end-to-end: measure the real compiled step time on a scratch

@@ -29,6 +29,32 @@ class Model:
     def param_axes(self):
         return logical_axes(self.specs())
 
+    # ---- pipeline stages ----
+    def stage_params(self, params, lo: int, hi: int):
+        """Stage-local view of a param tree: block-stack rows
+        ``[lo, hi)`` (the contiguous layer slice a pipeline stage owns),
+        with embed / final-norm / head passed through — the first and
+        last stages read those, every other stage just carries its
+        (replicated) copy.  Used by stage-local init/restore paths so a
+        host never materializes another stage's blocks."""
+        from repro.models.params import slice_stacked
+
+        out = dict(params)
+        out["groups"] = [slice_stacked(g, lo, hi) for g in params["groups"]]
+        return out
+
+    def init_stage(self, key, lo: int, hi: int, dtype=jnp.float32):
+        """Stage-local init: draws the FULL stacked leaves (so values are
+        bit-identical to :meth:`init` — per-leaf keys don't depend on
+        the stage cut) and keeps only rows ``[lo, hi)``.  The transient
+        full draw is freed immediately; steady-state memory is one
+        stage's params."""
+        return self.stage_params(self.init(key, dtype), lo, hi)
+
+    def abstract_stage(self, lo: int, hi: int, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct tree of one stage's state (restore specs)."""
+        return self.stage_params(self.abstract(dtype), lo, hi)
+
     # ---- compute ----
     def apply(self, params, batch: Dict[str, Any], *, mode: str = "train",
               cache=None, **kw):

@@ -91,3 +91,16 @@ def stack_specs(spec_tree, repeats: int):
         ),
         spec_tree,
     )
+
+
+def slice_stacked(tree, lo: int, hi: int):
+    """Rows ``[lo, hi)`` of every layers-stacked leaf of a param
+    (sub)tree — the per-stage partition of a scan-stacked block group
+    (``distributed/pipeline.py`` cuts stage bounds; this applies them).
+    Works on arrays and ShapeDtypeStructs alike."""
+    def one(x):
+        if hasattr(x, "dtype") and not hasattr(x, "__getitem__"):
+            return jax.ShapeDtypeStruct((hi - lo, *x.shape[1:]), x.dtype)
+        return x[lo:hi]
+
+    return jax.tree_util.tree_map(one, tree)

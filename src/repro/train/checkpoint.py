@@ -40,41 +40,92 @@ import jax
 import numpy as np
 
 
-def _host_leaf(leaf) -> np.ndarray:
+class SubShardLeaf:
+    """Host snapshot of a CROSS-PROCESS sharded leaf: only the slices
+    this process's devices own, each with its offset into the global
+    array (deduplicated — local replicas of the same slice are stored
+    once).
+
+    This is what lets multi-controller fsdp checkpoint: each process
+    writes its sub-shards into its own ``shard-<pidx>.npz`` (keys
+    ``<leaf>@sub<k>``) plus a ``shard-<pidx>.subshards.json`` manifest
+    recording ``{start, shape}`` per slice, and on restore reassembles
+    ONLY its addressable region (the rest of the buffer is zero-filled
+    and never read: ``device_put`` onto the same sharding takes just
+    the local slices).
+    """
+
+    def __init__(self, leaf):
+        self.global_shape = tuple(leaf.shape)
+        self.parts: List[Tuple[Tuple[int, ...], np.ndarray]] = []
+        seen = set()
+        for sh in leaf.addressable_shards:
+            start = tuple((sl.start or 0) for sl in sh.index)
+            if start in seen:
+                continue
+            seen.add(start)
+            arr = np.asarray(sh.data)
+            if arr.dtype.name == "bfloat16":
+                arr = arr.astype(np.float32)
+            self.parts.append((start, arr))
+
+
+def _host_leaf(leaf):
     """Device->host copy of one state leaf.
 
-    Guard, not a capability: a leaf sharded across PROCESSES (real
-    multi-controller fsdp — params/moments split over a cross-host
-    'data' axis) cannot be fetched whole by one process, and np.asarray
-    would raise from deep inside the saver.  Until the shard layout
-    stores per-process sub-shards (ROADMAP), fail at the snapshot with
-    an actionable message instead.  Single-process meshes — however
-    many local devices — are always fully addressable."""
+    A leaf sharded across PROCESSES (real multi-controller fsdp —
+    params/moments split over a cross-host 'data' axis) cannot be
+    fetched whole by one process; it is snapshotted as a
+    :class:`SubShardLeaf` holding just this process's slices + offsets.
+    Fully-addressable leaves (single-process meshes — however many
+    local devices — plus replicated or locally-sharded state) come back
+    as plain arrays, byte-identical to the pre-subshard format."""
     if not getattr(leaf, "is_fully_addressable", True):
-        raise NotImplementedError(
-            "checkpointing cross-process sharded state is not supported "
-            "yet: this leaf spans devices of other processes (e.g. "
-            "--sharding fsdp under a real jax.distributed launch). "
-            "See docs/resume.md.")
+        return SubShardLeaf(leaf)
     return np.asarray(leaf)
 
 
-def _flatten(tree) -> Dict[str, Any]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+def _is_host_leaf(x) -> bool:
+    return isinstance(x, (SubShardLeaf, np.ndarray))
+
+
+def _flatten(tree) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Flatten a (possibly already host-snapshotted) state tree to npz
+    arrays.  Returns ``(flat, subshards)``: cross-process leaves land
+    as ``<key>@sub<k>`` entries in ``flat`` with their offsets recorded
+    in ``subshards[key]`` (the sidecar manifest content)."""
+    flat: Dict[str, Any] = {}
+    subs: Dict[str, Any] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=_is_host_leaf)[0]:
         key = "/".join(
             str(getattr(p, "key", getattr(p, "idx", p))) for p in path
         )
-        arr = _host_leaf(leaf)
+        if not _is_host_leaf(leaf):
+            leaf = _host_leaf(leaf)
+        if isinstance(leaf, SubShardLeaf):
+            subs[key] = {"global_shape": list(leaf.global_shape),
+                         "parts": []}
+            for k, (start, arr) in enumerate(leaf.parts):
+                flat[f"{key}@sub{k}"] = arr
+                subs[key]["parts"].append(
+                    {"start": list(start), "shape": list(arr.shape)})
+            continue
+        arr = leaf
         if arr.dtype.name == "bfloat16":  # npz has no bf16: lossless upcast
             arr = arr.astype(np.float32)
         flat[key] = arr
-    return flat
+    return flat, subs
 
 
 def save(path: str, tree, step: int | None = None) -> str:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat = _flatten(tree)
+    flat, subs = _flatten(tree)
+    if subs:
+        raise NotImplementedError(
+            "the flat single-file layout cannot hold cross-process "
+            "sharded state; use the sharded ckpt_dir layout "
+            "(save_sharded), which stores per-process sub-shards.")
     np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
     meta = {"n_arrays": len(flat), "step": step}
     with open(re.sub(r"\.npz$", "", path) + ".meta.json", "w") as f:
@@ -109,11 +160,18 @@ def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
     restored from) are never pruned.  Returns the step directory."""
     d = step_dir(base_dir, step)
     os.makedirs(d, exist_ok=True)
-    flat = _flatten(tree)
+    flat, subs = _flatten(tree)
     shard = os.path.join(d, _shard_name(process_index))
     tmp = shard + f".tmp.{os.getpid()}.npz"  # np.savez appends .npz otherwise
     np.savez(tmp, **flat)
     os.replace(tmp, shard)
+    if subs:
+        # cross-process leaves: the sub-shard manifest (slice offsets
+        # into each global leaf) rides next to this process's npz
+        sj = re.sub(r"\.npz$", ".subshards.json", shard)
+        with open(sj + ".tmp", "w") as f:
+            json.dump(subs, f)
+        os.replace(sj + ".tmp", sj)
     if pipeline_state is not None:
         if hasattr(pipeline_state, "to_json"):
             pipeline_state = pipeline_state.to_json()
@@ -309,16 +367,47 @@ class AsyncCheckpointer:
 
 
 def restore(path: str, like):
-    """Restore into the structure of ``like`` (a pytree template)."""
+    """Restore into the structure of ``like`` (a pytree template).
+
+    Leaves saved as cross-process sub-shards are reassembled into a
+    full-shape buffer holding THIS process's slices at their recorded
+    offsets; regions owned by other processes stay zero and are never
+    read — committing the result onto the checkpoint's sharding
+    (``StepRunner.place_state`` / ``device_put``) takes only the local
+    slices."""
     if not path.endswith(".npz"):
         path = path + ".npz"
     data = np.load(path)
+    subs = {}
+    sj = re.sub(r"\.npz$", ".subshards.json", path)
+    if os.path.exists(sj):
+        with open(sj) as f:
+            subs = json.load(f)
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat_like:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        if key in subs:
+            rec = subs[key]
+            assert tuple(rec["global_shape"]) == tuple(leaf.shape), (
+                key, rec["global_shape"], leaf.shape)
+            arr = np.zeros(tuple(leaf.shape),
+                           data[f"{key}@sub0"].dtype
+                           if rec["parts"] else np.float32)
+            for k, part in enumerate(rec["parts"]):
+                idx = tuple(slice(s, s + n) for s, n in
+                            zip(part["start"], part["shape"]))
+                arr[idx] = data[f"{key}@sub{k}"]
+            # stay a HOST array: this leaf is destined for a
+            # cross-process sharding, and committing the full global
+            # shape to one device would OOM exactly the states that
+            # only fit sharded (place_state pulls just the local
+            # slices via make_array_from_callback)
+            leaves.append(arr.astype(jax.numpy.dtype(leaf.dtype)))
+            continue
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape,
+                                                leaf.shape)
         leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)

@@ -139,7 +139,8 @@ class StepRunner:
             self.state_shardings = state_shardings(model, mesh, run,
                                                    plan=self.plan)
             self.batch_shardings = batch_shardings(model, mesh, run,
-                                                   run.shape)
+                                                   run.shape,
+                                                   plan=self.plan)
         self._jit = None        # built on first use: the batch half of
         self.compiled = None    # in_shardings must mirror the actual
         self._cost = None       # batch pytree structure
@@ -164,11 +165,28 @@ class StepRunner:
 
     def place_state(self, state):
         """Commit the state onto its sharded layout (so the donated-buffer
-        fast path applies from the very first step)."""
+        fast path applies from the very first step).
+
+        A sharding spanning other processes' devices (real
+        multi-controller fsdp) can't go through ``device_put`` on a host
+        buffer; those leaves are committed via
+        ``make_array_from_callback``, which reads only this process's
+        slices — the counterpart of the sub-shard checkpoint layout
+        (``train/checkpoint.py``), whose restore zero-fills exactly the
+        regions this path never touches."""
         if self.state_shardings is None:
             return state
-        return jax.tree_util.tree_map(
-            lambda x, s: jax.device_put(x, s), state, self.state_shardings)
+
+        def put(x, s):
+            if getattr(s, "is_fully_addressable", True):
+                return jax.device_put(x, s)
+            import numpy as np
+
+            host = np.asarray(x)
+            return jax.make_array_from_callback(
+                host.shape, s, lambda idx: host[idx])
+
+        return jax.tree_util.tree_map(put, state, self.state_shardings)
 
     # -- compilation -----------------------------------------------------
     def lower(self, state=None, batch=None):
@@ -225,6 +243,35 @@ class StepRunner:
         info.update(n_buckets=0, comm_bytes=0, bucket_bytes=[],
                     wire_bytes_per_device=0.0, param_gather_bytes=0,
                     gather_wire_bytes_per_device=0.0)
+        pp = self.plan.pipe_sync_plan(abstract)
+        if pp is not None:
+            from repro.distributed import pipeline
+
+            sched = self.plan.pipe_schedule_obj()
+            n_dp = self.plan.dp_size
+            n_all = n_dp * self.plan.pp_size
+            buckets = pp.buckets
+            info.update(gradsync.bucket_plan_stats(buckets))
+            info["bucket_bytes"] = [b.nbytes for b in buckets]
+            info["n_stage_buckets"] = len(pp.stage)
+            info["n_replicated_buckets"] = len(pp.replicated)
+            # stage grads ring over data only; replicated leaves ring
+            # over the whole (pipe x data) sync group
+            info["wire_bytes_per_device"] = (
+                gradsync.ring_allreduce_bytes(pp.stage_bytes, n_dp)
+                + gradsync.ring_allreduce_bytes(pp.replicated_bytes,
+                                                n_all))
+            rows = self.plan.local_batch // self.plan.n_micro
+            act = pipeline.activation_wire_bytes(
+                sched, (rows, self.run.shape.seq_len,
+                        self.model.cfg.d_model),
+                jnp.dtype(self.run.activation_dtype))
+            info.update(act)
+            info["bubble_fraction"] = sched.bubble_fraction()
+            info["bubble_analytic"] = pipeline.analytic_bubble(
+                sched.n_stages, sched.n_micro)
+            info["pp_buffer_depth"] = sched.buffer_depth
+            return info
         sp = self.plan.scatter_plan(abstract)
         if sp is not None:
             n = self.plan.dp_size
@@ -528,6 +575,11 @@ class TrainLoop:
             # all-gather volume — the other half of the decomposed
             # all-reduce, hidden under forward compute
             "param_gather_bytes": gs["param_gather_bytes"],
+            # pipe_overlap only (0 otherwise): schedule-level idle
+            # fraction and per-step boundary-activation transfer volume
+            "pp_bubble_fraction": gs.get("bubble_fraction", 0.0),
+            "act_wire_bytes_per_device":
+                gs.get("act_wire_bytes_per_device", 0.0),
         }
         return state, log
 

@@ -37,8 +37,9 @@ from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.accum import accumulate_grads
 from repro.core.mlm import lm_loss, mlm_loss
 from repro.distributed import gradsync
+from repro.distributed import pipeline as pipe
 from repro.distributed import sharding as shd
-from repro.distributed.sharding import (GRAD_SYNC_BUCKETED,
+from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_PIPE,
                                         GRAD_SYNC_SCATTER, ParallelPlan)
 from repro.models.attention import DistDecode
 from repro.models.model import Model
@@ -229,6 +230,8 @@ def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
         return _make_overlap_ddp_step(model, run, opt, plan)
     if plan.grad_sync == GRAD_SYNC_SCATTER:
         return _make_scatter_fsdp_step(model, run, opt, plan)
+    if plan.grad_sync == GRAD_SYNC_PIPE:
+        return _make_pipeline_step(model, run, opt, plan)
     constrain = None
     if mesh is not None:
         constrain = shd.activation_sharding(
@@ -298,6 +301,18 @@ def make_grad_fn(model: Model, run: RunConfig,
             scatter_body, mesh=plan.mesh,
             in_specs=(pspecs, _dp_batch_spec(plan)),
             out_specs=(P(), pspecs, P()), check_vma=False)
+    if plan.grad_sync == GRAD_SYNC_PIPE:
+        accum, _ = _pipeline_accum(model, run, plan)
+        pspecs = plan.pipe_param_specs(
+            model.abstract(jnp.dtype(run.param_dtype)))
+
+        # grads come out stage-local; the P('pipe')-on-layers out specs
+        # restack them into the full depth-L gradient tree, so callers
+        # compare against the unpipelined reference leaf-for-leaf
+        return shd.shard_map(
+            accum, mesh=plan.mesh,
+            in_specs=(pspecs, _dp_batch_spec(plan)),
+            out_specs=(P(), pspecs, P()), check_vma=False)
 
     def grad_fn(params, batch):
         def loss_fn(p, b):
@@ -315,7 +330,10 @@ def _axis_arg(dp_axes: Tuple[str, ...]):
 
 def _dp_batch_spec(plan: ParallelPlan) -> P:
     """shard_map spec prefix for the batch dict: leading (batch) dim over
-    the dp axes, everything else replicated."""
+    the dp axes, everything else replicated (fully replicated for a
+    pure-pp plan, whose batch rides whole into every stage column)."""
+    if not plan.dp_axes:
+        return P()
     return P(_axis_arg(plan.dp_axes))
 
 
@@ -384,19 +402,51 @@ def _scatter_accum(model: Model, run: RunConfig, plan: ParallelPlan):
     params persist across microbatches (per-layer regather would save
     that memory at n_micro x the gather traffic), and the scatter runs
     once, on the final accumulated gradients.
+
+    With ``plan.donate_gather`` (default, engages when there is no
+    microbatch accumulation) the step differentiates FROM THE SHARDS
+    instead: the bucketed gather sits inside the vjp, and its linear
+    transpose is exactly one ``psum_scatter`` per bucket — same
+    collectives, same reverse-layer overlap order — so backward's
+    full-width gradient buffers are handed straight to the scatter as
+    each bucket's cotangents complete and the full-size (f32) gradient
+    tree is never materialized: peak temp memory drops by about that
+    tree.  Wire volume is unchanged (one gather forward, one scatter
+    backward).  With accumulation the path is skipped — a per-microbatch
+    gather would multiply the forward wire volume by ``n_micro`` (the
+    per-layer-regather trade, tracked in ROADMAP).  The ``fsdp_overlap``
+    benchmark reports the measured peak-memory delta.
     """
     axis = _axis_arg(plan.dp_axes)
     sp = plan.scatter_plan(model.abstract(jnp.dtype(run.param_dtype)))
+    n_micro = run.microbatch or 1
+    gather = lambda lp: gradsync.gather_fsdp_params(lp, axis, sp)
+
+    if plan.donate_gather and n_micro == 1:
+        def accum(local_params, batch):
+            def loss_sh(lp, b):
+                return loss_for(model, gather(lp), b, run=run, mesh=None,
+                                axis_names=axis, dp_size=plan.dp_size)
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_sh, has_aux=True)(local_params, batch)
+            # scatter leaves arrived shard-shaped and summed (the
+            # gather's transpose); only the replicated remainder still
+            # needs its plain-psum buckets
+            grads = gradsync.bucketed_psum(grads, axis, sp.psum)
+            return loss, grads, metrics
+
+        return accum, axis, sp
 
     def accum(local_params, batch):
-        full_params = gradsync.gather_fsdp_params(local_params, axis, sp)
+        full_params = gather(local_params)
 
         def loss_fn(p, b):
             return loss_for(model, p, b, run=run, mesh=None,
                             axis_names=axis, dp_size=plan.dp_size)
 
         return accumulate_grads(
-            loss_fn, full_params, batch, run.microbatch or 1,
+            loss_fn, full_params, batch, n_micro,
             sync_grads=lambda g: gradsync.bucketed_psum_scatter(
                 g, axis, sp))
 
@@ -439,6 +489,119 @@ def _make_scatter_fsdp_step(model: Model, run: RunConfig, opt: AdamWConfig,
 
 
 # ---------------------------------------------------------------------------
+# Pipeline-parallel step (pp / pp_dp: distributed/pipeline.py)
+# ---------------------------------------------------------------------------
+
+
+def _pipeline_parts(model: Model, run: RunConfig, plan: ParallelPlan):
+    """The model-side callables of the staged executor: ``stage_fwd``
+    runs embed (first stage only, selected by the traced flag) plus this
+    rank's contiguous slice of the block stack — the same scanned
+    ``apply_group`` as the unpipelined forward, over a ``ScheduleGroup``
+    whose ``repeats`` is the per-stage depth — and ``stage_loss``
+    computes final-norm + chunked xent pieces (real on the last stage,
+    masked junk elsewhere).  Returns ``(stage_fwd, stage_loss,
+    act_shape, act_dtype)``; ``act_shape`` is the (microbatch, seq,
+    d_model) boundary-activation buffer both ppermute directions move.
+    """
+    from repro.configs.base import ScheduleGroup
+    from repro.models.blocks import apply_group
+    from repro.models.layers import add_positions, apply_norm, embed_tokens
+
+    cfg = model.cfg
+    g0 = cfg.schedule[0]
+    local_group = ScheduleGroup(pattern=g0.pattern,
+                                repeats=plan.stage_layers)
+    act_dtype = _act_dtype(run)
+    causal = cfg.family != "encoder"
+    chunk = loss_chunk_len(plan.global_batch, run.shape.seq_len,
+                           cfg.vocab_size,
+                           max(1, plan.dp_size * plan.n_micro))
+
+    def stage_fwd(params, x_recv, mb, is_first):
+        toks = mb["tokens"]
+        positions = jnp.arange(toks.shape[1], dtype=jnp.int32)[None]
+        h = embed_tokens(params["embed"], toks, cfg, act_dtype)
+        h = add_positions(params["embed"], h, positions, cfg)
+        h = jnp.where(is_first, h, x_recv)
+        h, _, _ = apply_group(
+            params["groups"][0], None, h, cfg, local_group,
+            positions=positions, mode="train", causal=causal,
+            remat=run.remat, use_pallas=run.use_pallas)
+        return h
+
+    def stage_loss(params, y, mb):
+        h = apply_norm(params["final_norm"], y, cfg)
+        mask = mb.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(mb["labels"].shape, jnp.float32)
+        return chunked_xent(params, h, mb["labels"], mask, cfg,
+                            chunk=chunk, use_pallas=run.use_pallas)
+
+    rows = plan.local_batch // plan.n_micro
+    act_shape = (rows, run.shape.seq_len, cfg.d_model)
+    return stage_fwd, stage_loss, act_shape, act_dtype
+
+
+def _pipeline_accum(model: Model, run: RunConfig, plan: ParallelPlan):
+    """Shared core of the pipeline paths (train step and
+    ``make_grad_fn``): staged executor -> data-axis bucketed sync ->
+    pipe-axis replicated sync.  Returns ``(accum(params, local_batch) ->
+    (loss, synced_grads, metrics), sync_plan)``; ``accum`` must run
+    INSIDE shard_map over the plan's mesh, and its grads are fully
+    summed (global) values in the stage-local layout."""
+    abstract = model.abstract(jnp.dtype(run.param_dtype))
+    sched = plan.pipe_schedule_obj()
+    sp = plan.pipe_sync_plan(abstract)
+    stage_fwd, stage_loss, act_shape, act_dtype = \
+        _pipeline_parts(model, run, plan)
+
+    def accum(params, batch):
+        loss, grads, metrics = pipe.pipeline_grads(
+            sched, params, batch, stage_fwd=stage_fwd,
+            stage_loss=stage_loss, act_shape=act_shape,
+            act_dtype=act_dtype, dp_axes=plan.dp_axes)
+        grads = pipe.pipe_grad_sync(grads, sp, "pipe", plan.dp_axes)
+        return loss, grads, metrics
+
+    return accum, sp
+
+
+def _make_pipeline_step(model: Model, run: RunConfig, opt: AdamWConfig,
+                        plan: ParallelPlan) -> Callable:
+    """The pipeline-parallel (GPipe / 1F1B) train step.
+
+    The block stack lives SHARDED over ``pipe`` on its leading layers
+    dim — params and Adam moments alike, so each rank stores and
+    updates only its stage (``ParallelPlan.pipe_param_specs``; embed /
+    final-norm / head replicated).  Inside one ``shard_map``: the
+    staged executor streams microbatches through the stages with
+    ``ppermute`` activation/cotangent transfers, within-stage gradients
+    reuse the bucketed data-axis psum, replicated leaves add one
+    pipe-inclusive psum, and the optimizer updates stage-local state
+    with a globally-assembled clipping norm.
+    """
+    accum, sp = _pipeline_accum(model, run, plan)
+    abstract = model.abstract(jnp.dtype(run.param_dtype))
+    pspecs = plan.pipe_param_specs(abstract)
+    state_spec = {"params": pspecs,
+                  "opt": {"mu": pspecs, "nu": pspecs, "step": P()}}
+
+    def body(state, batch):
+        _, grads, metrics = accum(state["params"], batch)
+        gnorm = pipe.pipe_global_norm(grads, sp, "pipe")
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"], grad_norm=gnorm)
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return shd.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(state_spec, _dp_batch_spec(plan)),
+        out_specs=(state_spec, P()), check_vma=False)
+
+
+# ---------------------------------------------------------------------------
 # Sharding trees for jit in/out_shardings
 # ---------------------------------------------------------------------------
 
@@ -459,9 +622,16 @@ def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
     layout is instead the plan's shard-dim split (every dp-divisible
     leaf sharded over the dp axes), matching the shard_map in/out specs
     of the scatter step — optimizer state included, so each device
-    stores and updates only its 1/dp slice (ZeRO-3)."""
+    stores and updates only its 1/dp slice (ZeRO-3).  Under a
+    ``pipe_overlap`` plan it is the stage layout: block-stack leaves
+    (and their moments) split over ``pipe`` on the layers dim."""
     if plan is not None and plan.grad_sync == GRAD_SYNC_SCATTER:
         specs = plan.scatter_param_specs(
+            model.abstract(jnp.dtype(run.param_dtype)))
+        p_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs)
+    elif plan is not None and plan.grad_sync == GRAD_SYNC_PIPE:
+        specs = plan.pipe_param_specs(
             model.abstract(jnp.dtype(run.param_dtype)))
         p_sh = jax.tree_util.tree_map(
             lambda s: NamedSharding(mesh, s), specs)
@@ -475,8 +645,13 @@ def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
 
 
 def batch_shardings(model: Model, mesh: Mesh, run: RunConfig,
-                    shape: ShapeConfig):
-    bspec = shd.batch_spec(mesh, shape.global_batch, run.sharding)
+                    shape: ShapeConfig,
+                    plan: Optional[ParallelPlan] = None):
+    """NamedSharding per batch leaf.  When a ``plan`` is given its own
+    dp axes are used (an engaged pipeline replicates the batch across
+    stages — the module-level mode-string recompute can't know that)."""
+    bspec = plan.batch_spec() if plan is not None \
+        else shd.batch_spec(mesh, shape.global_batch, run.sharding)
     ns = lambda ndim: NamedSharding(
         mesh, P(bspec[0], *([None] * (ndim - 1))))
     specs = model.input_specs(shape, act_dtype=_act_dtype(run))

@@ -1,0 +1,67 @@
+"""Unit tests for the benchmark step-time regression gate
+(``tools/check_bench_regression.py``): the ratio normalization is the
+whole point — a uniformly slower machine must NOT trip the gate, a
+relatively slower overlap path MUST."""
+import importlib.util
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+spec = importlib.util.spec_from_file_location(
+    "check_bench_regression",
+    os.path.join(ROOT, "tools", "check_bench_regression.py"))
+cbr = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(cbr)
+
+
+def row(name, derived):
+    return {"name": name, "us_per_call": 0.0, "derived": derived}
+
+
+BASE = [
+    row("grad_overlap_step",
+        "step_fused=132.9ms_bucketed=100.5ms_buckets=9_comm=1.86MB"),
+    row("grad_overlap_equiv", "err_over_tol_micro1=0.10_micro4=0.20"),
+]
+
+
+def test_step_ratios_parse_and_reference():
+    r = cbr.step_ratios(BASE[0]["derived"])
+    assert r == {"bucketed": 100.5 / 132.9}
+    assert cbr.step_ratios("err=0.1") is None
+
+
+def test_uniformly_slower_machine_passes():
+    fresh = [
+        row("grad_overlap_step",
+            "step_fused=265.8ms_bucketed=201.0ms_buckets=9"),  # 2x slower
+        row("grad_overlap_equiv", "err_over_tol_micro1=0.10_micro4=0.20"),
+    ]
+    fails, report = cbr.compare(BASE, fresh)
+    assert not fails, fails
+    assert any("presence OK" in line for line in report)
+
+
+def test_relative_regression_fails():
+    fresh = [
+        row("grad_overlap_step",
+            "step_fused=132.9ms_bucketed=140.0ms"),  # ratio 0.76 -> 1.05
+        row("grad_overlap_equiv", "err_over_tol_micro1=0.10_micro4=0.20"),
+    ]
+    fails, _ = cbr.compare(BASE, fresh)
+    assert len(fails) == 1 and "REGRESSION" in fails[0]
+
+
+def test_within_threshold_passes():
+    fresh = [
+        row("grad_overlap_step",
+            "step_fused=132.9ms_bucketed=108.0ms"),  # +7.5% ratio
+        row("grad_overlap_equiv", "x"),
+    ]
+    fails, _ = cbr.compare(BASE, fresh)
+    assert not fails
+
+
+def test_missing_row_fails():
+    fails, _ = cbr.compare(BASE, BASE[:1])
+    assert any("missing" in f for f in fails)

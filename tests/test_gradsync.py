@@ -245,6 +245,66 @@ def test_plan_strategy_table(mode, axes, gb, micro, moe, expect):
     assert plan.grad_sync == expect, plan.describe()
 
 
+# the pp/pp_dp half of the fallback spec (docs/parallelism.md table):
+# pipelining engages only when the pipe axis is real, the depth divides
+# into equal stages, the model is stageable and MoE-free, and the
+# microbatch count divides the per-shard batch; every other combination
+# demotes 'pipe' to a plain data axis and dispatches like ddp.
+PP_STRATEGY_TABLE = [
+    # mode, axes, gb, micro, moe, n_layers, stageable -> strategy
+    ("pp", dict(pipe=2, data=1), 8, 2, False, 4, True, "pipe_overlap"),
+    ("pp_dp", dict(pipe=2, data=4), 16, 2, False, 4, True,
+     "pipe_overlap"),
+    ("pp_dp", dict(pipe=2, data=2), 16, 8, False, 4, True,
+     "pipe_overlap"),      # M == the full per-shard batch (local 8)
+    # M exceeds the per-shard batch (local 4 < 8): pipelining declines,
+    # and so does the demoted-ddp path (2 % 8 != 0) -> fused
+    ("pp_dp", dict(pipe=2, data=4), 16, 8, False, 4, True,
+     GRAD_SYNC_XLA),
+    # MoE: no pipelining AND no bucketed fallback (aux loss is global)
+    ("pp_dp", dict(pipe=2, data=4), 16, 2, True, 4, True,
+     GRAD_SYNC_XLA),
+    # stage-indivisible depth: pipe demoted to a data axis -> ddp
+    # dispatch over ('pipe','data')
+    ("pp_dp", dict(pipe=2, data=4), 16, 2, False, 5, True,
+     GRAD_SYNC_BUCKETED),
+    # structurally un-stageable model (multi-group / shared weights)
+    ("pp_dp", dict(pipe=2, data=4), 16, 2, False, 4, False,
+     GRAD_SYNC_BUCKETED),
+    # pipe axis of size 1: nothing to pipeline -> ddp dispatch
+    ("pp_dp", dict(pipe=1, data=4), 16, 1, False, 4, True,
+     GRAD_SYNC_BUCKETED),
+    # microbatch does not divide the per-shard batch: pipelining AND the
+    # bucketed fallback both decline -> fused
+    ("pp_dp", dict(pipe=2, data=4), 8, 3, False, 4, True,
+     GRAD_SYNC_XLA),
+    # single shard every way
+    ("pp", dict(pipe=1, data=1), 8, 1, False, 4, True, GRAD_SYNC_NONE),
+]
+
+
+@pytest.mark.parametrize("mode,axes,gb,micro,moe,nl,stg,expect",
+                         PP_STRATEGY_TABLE)
+def test_plan_strategy_table_pp(mode, axes, gb, micro, moe, nl, stg,
+                                expect):
+    plan = ParallelPlan.make(FakeMesh(**axes), mode, gb,
+                             microbatch=micro, has_moe=moe,
+                             n_layers=nl, stageable=stg)
+    assert plan.grad_sync == expect, plan.describe()
+
+
+def test_pp_fallback_demotes_pipe_to_data_axis():
+    # engaged: batch over ('data',) only, replicated across stages
+    p = ParallelPlan.make(FakeMesh(pipe=2, data=4), "pp_dp", 16,
+                          microbatch=2, n_layers=4)
+    assert p.pipe_engaged and p.dp_axes == ("data",) and p.pp_size == 2
+    # indivisible depth: pipe joins the dp axes
+    f = ParallelPlan.make(FakeMesh(pipe=2, data=4), "pp_dp", 16,
+                          microbatch=2, n_layers=5)
+    assert not f.pipe_engaged and f.dp_axes == ("pipe", "data")
+    assert f.pp_size == 1 and f.dp_size == 8
+
+
 # ---------------------------------------------------------------------------
 # fsdp bucket partitioning (pure)
 # ---------------------------------------------------------------------------

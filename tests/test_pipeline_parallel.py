@@ -1,0 +1,300 @@
+"""Pipeline-parallel subsystem tests (``distributed/pipeline.py``).
+
+Pure parts in-process (stage partitioning, schedule tables, bubble
+accounting, param-spec/bucket layout); the 4-device 2-stage x 2-dp
+equivalence acceptance — 1F1B loss trajectory vs the single-stage ddp
+baseline, plus grad equivalence for both schedules — in a subprocess
+with its own virtual-device count (like test_multidevice).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _subproc import run_py
+from repro.configs import get_config, reduced
+from repro.distributed import pipeline as pp
+from repro.distributed.sharding import ParallelPlan
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# Stage partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_stages_balances_uniform_costs():
+    bounds = pp.plan_stages([1.0] * 8, 4)
+    assert bounds == [(0, 2), (2, 4), (4, 6), (6, 8)]
+
+
+def test_plan_stages_minimizes_max_stage_cost():
+    # heavy block at the front: the contiguous min-max partition puts it
+    # alone rather than splitting evenly by count
+    bounds = pp.plan_stages([10, 1, 1, 1], 2)
+    assert bounds == [(0, 1), (1, 4)]
+    with pytest.raises(ValueError):
+        pp.plan_stages([1.0], 2)
+
+
+def test_stage_bounds_from_model_costs_are_contiguous_and_cover():
+    cfg = reduced(get_config("bert-mlm-120m"))
+    import dataclasses
+
+    g = cfg.schedule[0]
+    cfg = dataclasses.replace(
+        cfg, schedule=(dataclasses.replace(g, pattern=g.pattern[:1],
+                                           repeats=6),))
+    bounds = pp.stage_bounds(cfg, 3, seq_len=64)
+    assert bounds[0][0] == 0 and bounds[-1][1] == 6
+    for (a, b), (c, d) in zip(bounds, bounds[1:]):
+        assert b == c
+    # uniform blocks: the cost-balanced cut is the equal-depth cut the
+    # SPMD executor requires
+    assert [hi - lo for lo, hi in bounds] == [2, 2, 2]
+    assert pp.stage_imbalance(cfg, bounds, 64) == pytest.approx(1.0)
+
+
+def test_stage_compatible_gates():
+    cfg = get_config("bert-mlm-120m")
+    ok, why = pp.stage_compatible(reduced(cfg))
+    assert ok, why
+    moe = get_config("mixtral-8x7b")
+    assert pp.stage_compatible(moe) == (False, "moe")
+    zamba = get_config("zamba2-2.7b")
+    ok, why = pp.stage_compatible(zamba)
+    assert not ok
+    whisper = get_config("whisper-small")
+    assert pp.stage_compatible(whisper)[0] is False
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("S,M", [(2, 1), (2, 4), (2, 8), (4, 4), (4, 8)])
+def test_schedule_counts_and_bubble(kind, S, M):
+    sched = pp.make_schedule(kind, S, M)
+    # every stage forwards and backwards each microbatch exactly once
+    for s in range(S):
+        fwd = [sched.fwd_mb_static(t, s) for t in sched.ticks]
+        bwd = [sched.bwd_mb_static(t, s) for t in sched.ticks]
+        assert sorted(m for m in fwd if m is not None) == list(range(M))
+        assert sorted(m for m in bwd if m is not None) == list(range(M))
+    # the table's idle fraction IS the analytic bubble for both shipped
+    # schedules; 1F1B wins on buffer depth, not bubble
+    assert sched.bubble_fraction() == pytest.approx(
+        pp.analytic_bubble(S, M))
+    if kind == "1f1b":
+        assert sched.buffer_depth == min(S, M)
+    else:
+        assert sched.buffer_depth == M
+
+
+@pytest.mark.parametrize("kind", ["gpipe", "1f1b"])
+def test_schedule_dependencies_are_causal(kind):
+    """Stage s's forward of microbatch i must run strictly after stage
+    s-1's (transfers land at the next tick), and its backward strictly
+    after stage s+1's — the dataflow the executor's ppermutes assume."""
+    S, M = 3, 4
+    sched = pp.make_schedule(kind, S, M)
+
+    def tick_of(s, mb, fwd):
+        for k, t in enumerate(sched.ticks):
+            got = sched.fwd_mb_static(t, s) if fwd \
+                else sched.bwd_mb_static(t, s)
+            if got == mb:
+                return k
+        raise AssertionError((s, mb, fwd))
+
+    for i in range(M):
+        for s in range(1, S):
+            assert tick_of(s, i, True) > tick_of(s - 1, i, True)
+        for s in range(S - 1):
+            assert tick_of(s, i, False) > tick_of(s + 1, i, False)
+        # backward of a microbatch only after its last-stage forward
+        assert tick_of(S - 1, i, False) > tick_of(S - 1, i, True)
+
+
+def test_unknown_schedule_rejected():
+    with pytest.raises(ValueError):
+        pp.make_schedule("interleaved", 2, 4)
+
+
+def test_activation_wire_accounting():
+    sched = pp.make_schedule("gpipe", 2, 4)
+    w = pp.activation_wire_bytes(sched, (2, 8, 16), jnp.float32)
+    assert w["act_payload_bytes"] == 2 * 8 * 16 * 4
+    n_fwd, n_bwd = sched.n_transfer_ticks
+    assert w["act_transfers"] == n_fwd + n_bwd == 2 * (4 + 1)
+
+
+# ---------------------------------------------------------------------------
+# Param partitioning + sync plan
+# ---------------------------------------------------------------------------
+
+
+def _toy_params(L=4):
+    mk = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return {
+        "embed": {"tokens": mk(32, 8)},
+        "final_norm": {"scale": mk(8)},
+        "groups": [{"ln1": {"scale": mk(L, 8)},
+                    "mlp": {"wi": mk(L, 8, 16)}}],
+    }
+
+
+def test_stage_param_specs_shard_only_the_block_stack():
+    from jax.sharding import PartitionSpec as P
+
+    specs = pp.stage_param_specs(_toy_params())
+    assert specs["embed"]["tokens"] == P()
+    assert specs["final_norm"]["scale"] == P()
+    assert specs["groups"][0]["ln1"]["scale"] == P("pipe")
+    assert specs["groups"][0]["mlp"]["wi"] == P("pipe")
+
+
+def test_pipe_sync_plan_buckets_cover_and_split():
+    plan = ParallelPlan.make(FakeMesh(pipe=2, data=2), "pp_dp", 8,
+                             microbatch=2, n_layers=4,
+                             grad_bucket_mb=1e-4)
+    sp = plan.pipe_sync_plan(_toy_params())
+    leaves = jax.tree_util.tree_leaves(_toy_params())
+    seen = sorted(i for b in sp.buckets for i in b.indices)
+    assert seen == list(range(len(leaves)))
+    assert set(sp.stage_indices) == set(
+        pp.stage_param_leaf_indices(_toy_params()))
+    # stage buckets are sized at STAGE-LOCAL f32 shapes: (L/S, ...)
+    assert sp.stage_bytes == (2 * 8 + 2 * 8 * 16) * 4
+    assert sp.replicated_bytes == (32 * 8 + 8) * 4
+
+
+def test_model_stage_slicing_and_init():
+    import dataclasses
+
+    from repro.models import build_model
+
+    cfg = reduced(get_config("bert-mlm-120m"), d_model=64)
+    g = cfg.schedule[0]
+    cfg = dataclasses.replace(
+        cfg, schedule=(dataclasses.replace(g, pattern=g.pattern[:1],
+                                           repeats=4),))
+    model = build_model(cfg)
+    full = model.init(jax.random.PRNGKey(0))
+    stage = model.stage_params(full, 2, 4)
+    for a, b in zip(jax.tree_util.tree_leaves(full["groups"]),
+                    jax.tree_util.tree_leaves(stage["groups"])):
+        assert b.shape == (2,) + a.shape[1:]
+        np.testing.assert_array_equal(np.asarray(a[2:4]), np.asarray(b))
+    # stage-local init reproduces the full init's values for its rows
+    stage2 = model.init_stage(jax.random.PRNGKey(0), 2, 4)
+    for a, b in zip(jax.tree_util.tree_leaves(stage["groups"]),
+                    jax.tree_util.tree_leaves(stage2["groups"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ab = model.abstract_stage(1, 3, jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(ab["groups"]):
+        assert leaf.shape[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# 4-device 2-stage x 2-dp equivalence (subprocess, virtual devices)
+# ---------------------------------------------------------------------------
+
+
+EQUIV_BODY = """
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.distributed.sharding import ParallelPlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.runner import StepRunner, TrainLoop
+    from repro.train.train_step import init_state, make_grad_fn
+
+    B, S, STEPS = 8, 32, 8
+    cfg = dataclasses.replace(reduced(get_config("bert-mlm-120m"),
+                                      d_model=64),
+                              vocab_size=256, max_position=S)
+    g = cfg.schedule[0]
+    cfg = dataclasses.replace(
+        cfg, schedule=(dataclasses.replace(g, pattern=g.pattern[:1],
+                                           repeats=4),))
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=2, pipe=2)
+    opt = AdamWConfig(total_steps=STEPS)
+
+    def batches(seed=0):
+        rng = np.random.default_rng(seed)
+        while True:
+            toks = rng.integers(4, cfg.vocab_size, (B, S)).astype(np.int32)
+            yield {"tokens": toks, "labels": toks,
+                   "loss_mask": np.ones((B, S), np.float32)}
+
+    # -- grad equivalence, both schedules, M in {2, 4} -------------------
+    for M in (2, 4):
+        for sched in ("1f1b", "gpipe"):
+            run = RunConfig(model=cfg, shape=ShapeConfig("t", S, B, "train"),
+                            sharding="pp_dp", pp_schedule=sched,
+                            param_dtype="float32",
+                            activation_dtype="float32", microbatch=M)
+            plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.05)
+            assert plan.grad_sync == "pipe_overlap", plan.describe()
+            params = init_state(model, jax.random.PRNGKey(0), run)["params"]
+            batch = {k: jnp.asarray(v)
+                     for k, v in next(batches(7)).items()}
+            ref = dataclasses.replace(run, sharding="ddp")
+            _, gref, mref = jax.jit(make_grad_fn(model, ref))(params, batch)
+            _, gp, mp = jax.jit(make_grad_fn(model, run, mesh, plan))(
+                params, batch)
+            for a, b in zip(jax.tree_util.tree_leaves(gref),
+                            jax.tree_util.tree_leaves(gp)):
+                a, b = np.asarray(a), np.asarray(b)
+                tol = 1e-6 * max(float(np.abs(a).max()), 1.0) + 1e-8
+                assert float(np.abs(a - b).max()) <= tol, (sched, M)
+            assert abs(float(mref["loss"]) - float(mp["loss"])) <= \\
+                1e-6 * abs(float(mref["loss"]))
+
+    # -- 1F1B loss trajectory vs the single-stage ddp baseline -----------
+    def run_loop(sharding, mesh_):
+        run = RunConfig(model=cfg, shape=ShapeConfig("t", S, B, "train"),
+                        sharding=sharding, pp_schedule="1f1b",
+                        param_dtype="float32",
+                        activation_dtype="float32", microbatch=2)
+        plan = ParallelPlan.for_run(run, mesh_, grad_bucket_mb=0.05)
+        runner = StepRunner(model, run, opt, mesh_, plan=plan)
+        _, log = TrainLoop(runner, log_every=1).run(batches(2), STEPS)
+        assert runner.n_traces == 1
+        return [m["loss"] for m in log.metrics], runner
+
+    ref_losses, _ = run_loop("ddp", make_host_mesh(data=4))
+    pp_losses, runner = run_loop("pp_dp", mesh)
+    worst = max(abs(a - b) / max(abs(a), 1e-9)
+                for a, b in zip(ref_losses, pp_losses))
+    assert worst <= 1e-5, (worst, ref_losses[:3], pp_losses[:3])
+
+    # the stage layout really is sharded: block-stack leaves split over
+    # 'pipe' on the layers dim, moments included
+    st = runner.init_state(0)
+    leaf = jax.tree_util.tree_leaves(st["params"]["groups"])[0]
+    assert leaf.sharding.spec[0] == "pipe"
+    mu = jax.tree_util.tree_leaves(st["opt"]["mu"]["groups"])[0]
+    assert mu.sharding.spec[0] == "pipe"
+    gs = runner.grad_sync_info()
+    assert gs["grad_sync"] == "pipe_overlap"
+    assert gs["bubble_fraction"] <= gs["bubble_analytic"] * 1.25
+    print("pipeline equivalence OK", worst)
+"""
+
+
+def test_pipeline_2stage_2dp_equivalence():
+    out = run_py(EQUIV_BODY, n_devices=4, timeout=1200)
+    assert "pipeline equivalence OK" in out

@@ -1,0 +1,147 @@
+"""Multi-controller fsdp checkpointing: per-process SUB-shards.
+
+A cross-host ``data`` axis makes fsdp state leaves non-addressable per
+process, which the old saver refused (``checkpoint._host_leaf`` raised
+NotImplementedError).  The sub-shard layout lifts that: each process
+stores the slices its own devices hold (``<leaf>@sub<k>`` npz entries +
+a ``shard-<pidx>.subshards.json`` offset manifest) and restores only its
+addressable region.
+
+This is the 2-process acceptance: REAL ``jax.distributed`` processes
+(CPU collectives), a 4-device mesh spanning both, a state tree mixing
+dim-0-sharded / dim-1-sharded (scan-stacked) / replicated / scalar
+leaves.  Each process saves, restores from ONLY its own files, commits
+the result back onto the same sharding, and asserts every local device
+shard is bit-identical to the original global arrays.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BODY = """
+    import json, os, sys, time
+    import numpy as np
+    import jax
+
+    PORT = os.environ["SUBSHARD_PORT"]
+    PID = int(sys.argv[1])
+    TMP = os.environ["SUBSHARD_TMP"]
+    jax.distributed.initialize(coordinator_address=f"localhost:{PORT}",
+                               num_processes=2, process_id=PID)
+    assert jax.process_count() == 2
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train import checkpoint as ckpt
+
+    mesh = Mesh(np.array(jax.devices()).reshape(-1), ("data",))
+    rng = np.random.default_rng(7)
+    full = {
+        "w": rng.normal(size=(16, 3)).astype(np.float32),
+        "stacked": rng.normal(size=(1, 8, 6)).astype(np.float32),
+        "rep": rng.normal(size=(5,)).astype(np.float32),
+        "step": np.int32(42),
+    }
+    specs = {"w": P("data"), "stacked": P(None, "data"),
+             "rep": P(), "step": P()}
+
+    def mk(k):
+        v = full[k]
+        sh = NamedSharding(mesh, specs[k])
+        return jax.make_array_from_callback(
+            np.shape(v), sh, lambda idx: np.asarray(v)[idx])
+
+    state = {k: mk(k) for k in full}
+    # cross-process leaves really are non-addressable from one process
+    assert not state["w"].is_fully_addressable
+
+    ckpt.save_sharded(TMP, state, step=3, process_index=PID,
+                      process_count=2)
+    # wait for BOTH shards + the manifest (process 0 commits it)
+    d = ckpt.step_dir(TMP, 3)
+    want = [os.path.join(d, "manifest.json"),
+            os.path.join(d, "shard-00000.npz"),
+            os.path.join(d, "shard-00001.npz")]
+    for _ in range(200):
+        if all(os.path.exists(p) for p in want):
+            break
+        time.sleep(0.05)
+    assert ckpt.latest_step(TMP) == 3
+
+    like = {k: jax.ShapeDtypeStruct(np.shape(v), v.dtype)
+            for k, v in full.items()}
+    tree, _, manifest = ckpt.restore_sharded(TMP, like, step=3,
+                                             process_index=PID)
+    assert manifest["process_count"] == 2
+
+    # commit back onto the SAME sharding: only local slices are read,
+    # so the zero-filled non-owned regions of the restored buffer are
+    # irrelevant by construction
+    placed = {}
+    for k in full:
+        host = np.asarray(tree[k])
+        sh = NamedSharding(mesh, specs[k])
+        placed[k] = jax.make_array_from_callback(
+            host.shape, sh, lambda idx, h=host: h[idx])
+
+    for k, v in full.items():
+        for s in placed[k].addressable_shards:
+            np.testing.assert_array_equal(np.asarray(s.data),
+                                          np.asarray(v)[s.index])
+    print(f"proc {PID} subshard save/restore OK", flush=True)
+"""
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_two_process_fsdp_subshard_save_restore(tmp_path):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["SUBSHARD_PORT"] = str(_free_port())
+    env["SUBSHARD_TMP"] = str(tmp_path / "ck")
+    body = textwrap.dedent(BODY)
+    procs = [subprocess.Popen([sys.executable, "-c", body, str(pid)],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True)
+             for pid in (0, 1)]
+    outs = []
+    for p in procs:
+        try:
+            out, err = p.communicate(timeout=300)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append((p.returncode, out, err))
+    for rc, out, err in outs:
+        assert rc == 0, err[-3000:]
+        assert "subshard save/restore OK" in out
+    # the sub-shard sidecar manifests exist and carry slice offsets
+    d = os.path.join(env["SUBSHARD_TMP"], "ckpt-00000003")
+    for pidx in (0, 1):
+        sj = os.path.join(d, f"shard-{pidx:05d}.subshards.json")
+        assert os.path.exists(sj), sj
+        with open(sj) as f:
+            subs = json.load(f)
+        assert "w" in subs and "stacked" in subs
+        # replicated across a cross-process mesh: still non-addressable
+        # as a whole, stored as ONE full-coverage slice (deduplicated
+        # across this host's devices)
+        assert subs["rep"]["parts"] == [{"start": [0], "shape": [5]}]
+        assert subs["w"]["global_shape"] == [16, 3]
+        starts = sorted(p["start"][0] for p in subs["w"]["parts"])
+        # 4-way sharding over 2 processes: this host owns 2 of 4 slices
+        assert len(starts) == 2 and all(s % 4 == 0 for s in starts)

@@ -1,0 +1,114 @@
+"""Benchmark-regression gate: fresh ``--json`` rows vs committed
+``BENCH_<group>.json`` baselines (see ``benchmarks/run.py --baseline``).
+
+What is compared — and why it is machine-independent: CI runners have
+wildly different absolute speeds, so raw wall-clock cannot gate.  Every
+``*_step`` benchmark row embeds SEVERAL step times measured in the same
+process on the same machine (e.g. ``step_fused=132.9ms_bucketed=100.5ms``);
+the first variant in the row is the in-run reference, and the figure of
+merit is each other variant's ratio to it.  A >``--threshold`` (default
+15%) increase of that ratio vs the committed baseline means the overlap
+path got slower RELATIVE to its own fused/unpipelined reference — a real
+scheduling/communication regression, not a slow runner.
+
+Rows without multiple step times (equivalence, stall, bubble rows) are
+checked for presence only: a silently vanished row usually means a
+benchmark stopped asserting something.
+
+Usage:
+    python tools/check_bench_regression.py BENCH_grad_overlap.json \\
+        fresh-grad-overlap.json [--threshold 0.15]
+
+Exit 0 = no regression; exit 1 = regression or missing rows, with a
+human-readable report either way.  After an intentional perf change,
+refresh the baseline (``benchmarks/run.py <group> --baseline``) and
+commit it.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# "<variant>=<float>ms" pairs; the row format separates fields with
+# '_', which \w would swallow — strip leading underscores from keys
+STEP_PAIR = re.compile(r"(\w+?)=([0-9.]+)ms(?![a-zA-Z])")
+
+
+def step_ratios(derived: str) -> Optional[Dict[str, float]]:
+    """``{variant: time/reference_time}`` for a multi-variant step row
+    (reference = first listed variant), or None when the row carries
+    fewer than two step times."""
+    pairs = [(k.lstrip("_"), float(v))
+             for k, v in STEP_PAIR.findall(derived)]
+    if len(pairs) < 2:
+        return None
+    ref = pairs[0][1]
+    if ref <= 0:
+        return None
+    return {k: v / ref for k, v in pairs[1:]}
+
+
+def compare(baseline: List[dict], fresh: List[dict],
+            threshold: float = 0.15) -> Tuple[List[str], List[str]]:
+    """Returns (failures, report_lines)."""
+    fails: List[str] = []
+    report: List[str] = []
+    fresh_by_name = {r["name"]: r for r in fresh}
+    for row in baseline:
+        name = row["name"]
+        if name not in fresh_by_name:
+            fails.append(f"{name}: row missing from fresh results")
+            continue
+        base_r = step_ratios(row.get("derived", ""))
+        new_r = step_ratios(fresh_by_name[name].get("derived", ""))
+        if base_r is None:
+            report.append(f"{name}: presence OK (no step ratio)")
+            continue
+        if new_r is None:
+            fails.append(f"{name}: fresh row lost its step times")
+            continue
+        for variant, br in base_r.items():
+            nr = new_r.get(variant)
+            if nr is None:
+                fails.append(f"{name}: variant {variant} disappeared")
+                continue
+            rel = (nr - br) / br
+            line = (f"{name}/{variant}: ratio {br:.3f} -> {nr:.3f} "
+                    f"({rel:+.1%})")
+            if rel > threshold:
+                fails.append(line + f"  REGRESSION (> {threshold:.0%})")
+            else:
+                report.append(line)
+    return fails, report
+
+
+def main(argv: List[str]) -> int:
+    thr = 0.15
+    if "--threshold" in argv:
+        i = argv.index("--threshold")
+        thr = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        baseline = json.load(f)
+    with open(argv[1]) as f:
+        fresh = json.load(f)
+    fails, report = compare(baseline, fresh, thr)
+    for line in report:
+        print("  ok  " + line)
+    for line in fails:
+        print("  FAIL " + line)
+    if fails:
+        print(f"{len(fails)} benchmark regression(s) vs {argv[0]}")
+        return 1
+    print(f"no step-time regression vs {argv[0]} "
+          f"(threshold {thr:.0%}, {len(report)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
