@@ -28,6 +28,14 @@ CSV rows (derived = the claim-relevant figure of merit).
                          trajectory, schedule bubble fraction vs the
                          analytic (S-1)/(S-1+M) bound, activation
                          ppermute volume
+  moe_overlap            expert-parallel MoE (4 data x 2 expert on 8 CPU
+                         devices): capacity-bucketed all_to_all dispatch
+                         with the shared-expert FFN overlapping the
+                         exchange — EP grads vs the dense one-hot oracle
+                         at microbatches 1 and 4, bucketed-ddp MoE grads
+                         vs the same oracle (psum'd router statistics),
+                         20-step EP loss trajectory, overlapped vs
+                         sequential dispatch step time
   data_pipeline          deterministic pipeline vs seed loader throughput,
                          per-host shard disjointness, resume overhead
   kernel_*               Pallas kernels (interpret mode) vs jnp oracle
@@ -735,6 +743,194 @@ def _pipeline_overlap_worker():
     print(json.dumps(out))
 
 
+def _moe_overlap_worker():
+    """Runs in a subprocess with 8 virtual CPU devices (4-wide data x
+    2-wide expert axis); prints one JSON line.  The acceptance surface
+    of the expert-parallel MoE subsystem (``models/moe.py`` +
+    ``ep_overlap``):
+
+      equivalence — EP all_to_all-dispatch gradients vs the dense
+                    one-hot single-device oracle at microbatch counts 1
+                    and 4 (capacity_factor = n_experts, so no drops and
+                    the two dispatches compute identical math), plus
+                    the bucketed-ddp MoE path (psum'd router stats, no
+                    expert axis) vs the same oracle
+      trajectory  — a 20-step EP loss trajectory vs the dense bucketed
+                    runner on the same batches
+      telemetry   — step time for sequential vs overlapped dispatch
+                    (shared-expert FFN inside the all_to_all window),
+                    grad bucket layout, dispatch wire bytes
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.distributed.sharding import ParallelPlan
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build_model
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.runner import StepRunner, TrainLoop
+    from repro.train.train_step import init_state, make_grad_fn
+
+    B, S, STEPS, EP = 32, 64, 20, 2
+    cfg = dataclasses.replace(reduced(get_config("mixtral-8x7b"),
+                                      d_model=128),
+                              vocab_size=512, max_position=S)
+    # a shared expert gives the dispatch something to overlap with, and
+    # capacity_factor = n_experts means no token ever drops — the EP
+    # path must then reproduce the dense oracle exactly
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(
+            cfg.moe, n_shared=1,
+            capacity_factor=float(cfg.moe.n_experts)))
+    model = build_model(cfg)
+    mesh_ep = make_host_mesh(data=8 // EP, expert=EP)
+    mesh_dp = make_host_mesh(8)
+    opt = AdamWConfig(total_steps=STEPS)
+    out = {"equiv": {}}
+
+    def batches(seed=0):
+        rng = np.random.default_rng(seed)
+        while True:
+            toks = rng.integers(4, cfg.vocab_size, (B, S)).astype(np.int32)
+            yield {"tokens": toks, "labels": toks,
+                   "loss_mask": np.ones((B, S), np.float32)}
+
+    # -- gradient equivalence at microbatch counts 1 and 4 ---------------
+    for n_micro in (1, 4):
+        run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                        sharding="ddp", param_dtype="float32",
+                        activation_dtype="float32", microbatch=n_micro)
+        params = init_state(model, jax.random.PRNGKey(0), run)["params"]
+        batch = {k: jnp.asarray(v) for k, v in next(batches(7)).items()}
+        # the Switch aux is nonlinear in each microbatch's row set, and
+        # the sharded paths split microbatches per-shard while the
+        # single-device reference chunks the global batch contiguously.
+        # Permute the reference batch so its contiguous microbatch m is
+        # exactly the union of the shards' m-th local slices — same
+        # partition, same estimator, so grads must agree to float
+        # tolerance (identity when n_micro == 1)
+        r = B // 8 // n_micro
+        perm = np.arange(B).reshape(8, n_micro, r)
+        perm = perm.transpose(1, 0, 2).reshape(-1)
+        ref_batch = {k: v[perm] for k, v in batch.items()}
+        _, gref, mref = jax.jit(make_grad_fn(model, run))(params,
+                                                          ref_batch)
+
+        def worst_err(g):
+            w = 0.0
+            for a, b in zip(jax.tree_util.tree_leaves(gref),
+                            jax.tree_util.tree_leaves(g)):
+                a, b = np.asarray(a), np.asarray(b)
+                tol = 1e-6 * max(float(np.abs(a).max()), 1.0) + 1e-8
+                w = max(w, float(np.abs(a - b).max()) / tol)
+            return w
+
+        plan = ParallelPlan.for_run(run, mesh_ep, grad_bucket_mb=0.25)
+        assert plan.grad_sync == "ep_overlap", plan.describe()
+        _, ge, me = jax.jit(make_grad_fn(model, run, mesh_ep, plan))(
+            params, batch)
+        plan_dp = ParallelPlan.for_run(run, mesh_dp, grad_bucket_mb=0.25)
+        assert plan_dp.grad_sync == "bucketed_overlap", plan_dp.describe()
+        _, gb, mb = jax.jit(make_grad_fn(model, run, mesh_dp, plan_dp))(
+            params, batch)
+        out["equiv"][str(n_micro)] = {
+            "worst_err_over_tol": worst_err(ge),
+            "worst_err_over_tol_bucketed": worst_err(gb),
+            "loss_match": abs(float(mref["loss"]) - float(me["loss"]))
+                          <= 1e-6 * abs(float(mref["loss"])),
+        }
+
+    # -- 20-step loss trajectory + step time -----------------------------
+    def measure(mesh_, ep_overlap_dispatch=True):
+        run = RunConfig(model=cfg, shape=ShapeConfig("b", S, B, "train"),
+                        sharding="ddp", param_dtype="float32",
+                        activation_dtype="float32")
+        plan = ParallelPlan.for_run(
+            run, mesh_, grad_bucket_mb=0.25,
+            ep_overlap_dispatch=ep_overlap_dispatch)
+        runner = StepRunner(model, run, opt, mesh_, plan=plan)
+        gs = runner.grad_sync_info()
+        TrainLoop(runner, log_every=8).run(batches(1), 3)  # warm compile
+        _, log = TrainLoop(runner, log_every=1).run(batches(2), STEPS)
+        t = log.telemetry
+        return {"grad_sync": gs["grad_sync"],
+                "stall": t["stall_fraction"],
+                "step_ms": t["step_time_ema"] * 1e3,
+                "n_buckets": gs["n_buckets"],
+                "comm_mb": gs["comm_bytes"] / 1e6,
+                "wire_mb": gs["wire_bytes_per_device"] / 1e6,
+                "n_expert_buckets": gs.get("n_expert_buckets", 0),
+                "dispatch_wire_mb":
+                    gs.get("dispatch_wire_bytes_per_device", 0.0) / 1e6,
+                "losses": [m["loss"] for m in log.metrics]}
+
+    out["dense"] = measure(mesh_dp)
+    out["sequential"] = measure(mesh_ep, ep_overlap_dispatch=False)
+    out["overlap"] = measure(mesh_ep)
+    print(json.dumps(out))
+
+
+def bench_moe_overlap():
+    import subprocess
+    import sys as _sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [_sys.executable, os.path.abspath(__file__),
+         "--moe-overlap-worker"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    us = (time.perf_counter() - t0) * 1e6
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    sq, ov, dn = out["sequential"], out["overlap"], out["dense"]
+    emit(name="moe_overlap_step", us=us,
+         derived=(f"step_sequential={sq['step_ms']:.1f}ms_overlap="
+                  f"{ov['step_ms']:.1f}ms_dense={dn['step_ms']:.1f}ms"
+                  f"_buckets={ov['n_buckets']}"
+                  f"_expert_buckets={ov['n_expert_buckets']}"
+                  f"_dispatch_wire={ov['dispatch_wire_mb']:.2f}MB/dev"))
+    e1, e4 = out["equiv"]["1"], out["equiv"]["4"]
+    traj = max(abs(a - b) / max(abs(a), 1e-9)
+               for a, b in zip(dn["losses"], ov["losses"]))
+    emit(name="moe_overlap_equiv", us=0,
+         derived=(f"err_over_tol_micro1={e1['worst_err_over_tol']:.2f}"
+                  f"_micro4={e4['worst_err_over_tol']:.2f}"
+                  f"_bucketed1={e1['worst_err_over_tol_bucketed']:.2f}"
+                  f"_traj_rel={traj:.1e}"))
+    for e in (e1, e4):
+        assert e["worst_err_over_tol"] <= 1.0 and e["loss_match"], (
+            "EP all_to_all grads must match the dense one-hot oracle",
+            out)
+        assert e["worst_err_over_tol_bucketed"] <= 1.0, (
+            "bucketed-ddp MoE grads must match the dense oracle", out)
+    assert ov["grad_sync"] == sq["grad_sync"] == "ep_overlap", out
+    assert dn["grad_sync"] == "bucketed_overlap", out
+    assert len(dn["losses"]) == len(ov["losses"]) == 20
+    # 20 steps of f32 Adam on matching gradients: reduction-order noise
+    assert traj <= 1e-4, ("EP loss trajectory must match the dense "
+                          "bucketed baseline", out)
+    # CPU collectives are synchronous thread-rendezvous (no async DMA to
+    # hide behind), so overlap can't win wall-clock here — the assert
+    # pins that the overlapped schedule costs nothing vs sequential
+    # (10% slack for CPU timing noise); the committed baseline ratio
+    # rides the CI >15% drift gate
+    assert ov["step_ms"] <= sq["step_ms"] * 1.10, (
+        "overlapped dispatch step time must not exceed sequential", out)
+
+
 def bench_pipeline_overlap():
     import subprocess
     import sys as _sys
@@ -785,9 +981,10 @@ def bench_pipeline_overlap():
     # 20 steps of f32 Adam on matching gradients: reduction-order noise
     assert traj <= 1e-5, ("1F1B loss trajectory must match the "
                           "unpipelined baseline", out)
-    # the schedule-table bubble must respect the analytic bound
-    bound = analytic_bubble(2, 4) * 1.25
-    assert ob["bubble"] <= bound and og["bubble"] <= bound, (out, bound)
+    # cond-gating the bubble ticks must not change the schedule: the
+    # table bubble equals the analytic (S-1)/(S-1+M) exactly
+    bound = analytic_bubble(2, 4)
+    assert ob["bubble"] == bound and og["bubble"] == bound, (out, bound)
     # 1F1B's memory edge: in-flight stage inputs bounded by S, not M
     assert ob["buffer_depth"] <= og["buffer_depth"], out
 
@@ -944,6 +1141,9 @@ def main() -> None:
     if "--pipeline-overlap-worker" in argv:
         _pipeline_overlap_worker()
         return
+    if "--moe-overlap-worker" in argv:
+        _moe_overlap_worker()
+        return
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")
@@ -981,6 +1181,8 @@ def main() -> None:
         bench_fsdp_overlap()
     if want("pipeline_overlap"):
         bench_pipeline_overlap()
+    if want("moe_overlap"):
+        bench_moe_overlap()
     if want("data_pipeline"):
         with tempfile.TemporaryDirectory() as tmp:
             bench_data_pipeline(tmp)
@@ -995,7 +1197,8 @@ def main() -> None:
     if baseline:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         groups = ("train_overlap", "grad_overlap", "fsdp_overlap",
-                  "pipeline_overlap", "data_pipeline", "mlm", "kernel")
+                  "pipeline_overlap", "moe_overlap", "data_pipeline",
+                  "mlm", "kernel")
         for g in groups:
             rows = [r for r in RESULTS if r["name"].startswith(g)]
             if not rows:

@@ -365,3 +365,29 @@ def block_cost(cfg, spec, seq_len: int, *, batch: int = 1,
         nbytes += mlp_params * dtype_bytes
     nbytes += 2.0 * B * S * d * dtype_bytes           # boundary activations
     return Cost(flops=flops, bytes=nbytes)
+
+
+def ep_dispatch_bytes(cfg, local_tokens: int, ep: int, *,
+                      dtype_bytes: int = 2) -> float:
+    """Analytic per-device all_to_all wire bytes of ONE train step's MoE
+    dispatch under ``ep_overlap``: every MoE layer ships its (E, C, d)
+    capacity buffer out and back over the ``ep``-wide expert axis.
+
+    Joins the ring/scatter gradient wire models
+    (``gradsync.ring_allreduce_bytes`` / ``reduce_scatter_bytes``) so
+    the roofline can price an EP step end to end: grad sync bytes come
+    from the bucket plan, dispatch bytes from here.  Uses the same
+    capacity rounding as ``models.moe._capacity``, so the payload
+    matches what the lowered HLO actually moves.
+    """
+    from repro.distributed.gradsync import all_to_all_bytes
+    from repro.models.moe import _capacity
+
+    if cfg.moe is None or ep <= 1:
+        return 0.0
+    C = _capacity(local_tokens, cfg)
+    n_moe = sum(g.repeats for g in cfg.schedule
+                if any(s.moe for s in g.pattern))
+    payload = cfg.moe.n_experts * C * cfg.d_model * dtype_bytes
+    # two trips (dispatch + return) per MoE layer
+    return 2.0 * n_moe * all_to_all_bytes(payload, ep)

@@ -63,7 +63,8 @@ __all__ = [
     "bucketed_psum", "fused_psum",
     "gather_fsdp_params", "bucketed_psum_scatter", "fsdp_global_norm",
     "bucket_plan_stats", "ring_allreduce_bytes",
-    "reduce_scatter_bytes", "all_gather_bytes", "leaf_nbytes",
+    "reduce_scatter_bytes", "all_gather_bytes", "all_to_all_bytes",
+    "leaf_nbytes",
 ]
 
 AxisNames = Union[str, Tuple[str, ...]]
@@ -415,6 +416,18 @@ def reduce_scatter_bytes(total_bytes: int, n_devices: int) -> float:
 def all_gather_bytes(total_bytes: int, n_devices: int) -> float:
     """Wire bytes per device for a ring all-gather assembling
     ``total_bytes``: (n-1)/n * payload."""
+    if n_devices <= 1:
+        return 0.0
+    return (n_devices - 1) / n_devices * total_bytes
+
+
+def all_to_all_bytes(total_bytes: int, n_devices: int) -> float:
+    """Wire bytes per device for an all_to_all exchanging a
+    ``total_bytes`` local buffer: (n-1)/n * payload — each device keeps
+    its own 1/n slice and ships the rest.  This is the MoE dispatch wire
+    model (two trips per MoE layer: dispatch + return), latency-bound
+    rather than bandwidth-bound at small capacity buffers, which is why
+    ``ep_overlap`` hides it under the shared-expert FFN."""
     if n_devices <= 1:
         return 0.0
     return (n_devices - 1) / n_devices * total_bytes

@@ -41,9 +41,13 @@ stages compute concurrently.  This module adds that third axis — named
   global-batch gradient, so within-stage sync reuses
   ``gradsync.bucketed_psum`` unchanged.
 
-Bubble ticks compute on junk (zero-initialized) buffers with zero
-cotangents; the vjp is linear in the cotangent, so junk contributes
-exactly zero to gradients and (masked) metrics.
+Bubble ticks are skipped outright: the per-tick stage compute (forward,
+loss emit, vjp) sits behind ``lax.cond`` on the traced validity, so an
+invalid (tick, rank) pair costs a branch, not a full stage pass on junk
+buffers.  Collectives stay unconditional — validity differs across
+ranks, and a rank skipping a ppermute/psum its peers entered would
+deadlock — so the invalid branches feed zeros into the unconditional
+exchanges, which contribute exactly zero to gradients and metrics.
 """
 from __future__ import annotations
 
@@ -515,13 +519,22 @@ def pipeline_grads(sched: PipeSchedule, params, batch, *,
         lambda x: jnp.zeros(x.shape, jnp.float32), params)
     w_last = jnp.where(is_last, 1.0, 0.0)
 
+    # Bubble ticks are gated behind lax.cond on the traced validity, so
+    # invalid (tick, rank) pairs skip the stage compute entirely instead
+    # of running it on junk and masking the result.  Only LOCAL compute
+    # may live inside a cond: the predicates differ across ranks, so any
+    # collective inside would deadlock — ppermutes, the loss psum, and
+    # the buffer updates stay unconditional.
     for tick in sched.ticks:
         if tick.fwd:
             x_recv = jax.lax.ppermute(y_send, pipe_axis, down) if S > 1 \
                 else y_send
             i, fvalid = tick_mb(tick, fwd=True)
             mb = mb_at(i)
-            y = stage_fwd(params, x_recv, mb, is_first)
+            y = jax.lax.cond(
+                fvalid,
+                lambda: stage_fwd(params, x_recv, mb, is_first),
+                lambda: jnp.zeros(tuple(act_shape), act_dtype))
             slot = jnp.clip(i, 0, M - 1) % D
             old = jax.lax.dynamic_index_in_dim(x_buf, slot, 0,
                                                keepdims=False)
@@ -529,10 +542,14 @@ def pipeline_grads(sched: PipeSchedule, params, batch, *,
                 x_buf, jnp.where(fvalid, x_recv, old), slot, 0)
             y_send = y
             if tick.emit is not None:
-                nll, acc, den = stage_loss(params, y, mb)
-                vec = jax.lax.psum(
-                    jnp.stack([nll, acc, den]).astype(jnp.float32)
-                    * w_last, all_axes)
+                def emit_loss():
+                    nll, acc, den = stage_loss(params, y, mb)
+                    return jnp.stack([nll, acc, den]).astype(jnp.float32)
+
+                vec_local = jax.lax.cond(
+                    fvalid & is_last, emit_loss,
+                    lambda: jnp.zeros((3,), jnp.float32))
+                vec = jax.lax.psum(vec_local, all_axes)
                 piece_buf = piece_buf.at[tick.emit].set(vec)
         if tick.bwd:
             dy_recv = jax.lax.ppermute(dx_send, pipe_axis, up) if S > 1 \
@@ -552,13 +569,16 @@ def pipeline_grads(sched: PipeSchedule, params, batch, *,
                 nll, _, _ = stage_loss(p, yy, mbj)
                 return yy, nll * den_inv * (1.0 / M)
 
-            _, pull = jax.vjp(fb, params, x_old)
-            bvalid_f = jnp.where(bvalid, 1.0, 0.0)
-            dpiece = (w_last * bvalid_f).astype(jnp.float32)
-            dy = (dy_recv * bvalid_f.astype(dy_recv.dtype))
-            dparams, dx = pull((dy, dpiece))
+            def run_bwd():
+                _, pull = jax.vjp(fb, params, x_old)
+                return pull((dy_recv, w_last.astype(jnp.float32)))
+
+            dparams, dx = jax.lax.cond(
+                bvalid, run_bwd,
+                lambda: (jax.tree_util.tree_map(jnp.zeros_like, params),
+                         jnp.zeros_like(x_old)))
             grads = _tree_add(grads, dparams)
-            dx_send = dx * bvalid_f.astype(dx.dtype)
+            dx_send = dx
 
     den = jnp.maximum(piece_buf[:, 2], 1.0)
     per_mb_xent = piece_buf[:, 0] / den

@@ -10,6 +10,12 @@
   ``data``   the data-parallel / ZeRO axis inside a pod: batches shard
              over it in every mode, params + optimizer state shard over
              it under fsdp (``scatter_overlap``).
+  ``expert`` the expert-parallel axis (carved from ``data``, like
+             ``pipe``): MoE expert weights shard over it on their
+             leading ``experts`` dim and tokens move by ``all_to_all``
+             capacity dispatch (``models/moe.py``); the batch shards
+             over ``data`` x ``expert`` jointly, so for non-expert
+             leaves it is just more data parallelism.
   ``model``  the tensor-parallel axis (Megatron-style): heads/ff/vocab/
              expert dims shard over it under tp / fsdp_tp.
 
@@ -44,7 +50,7 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "ParallelPlan",
     "GRAD_SYNC_BUCKETED", "GRAD_SYNC_SCATTER", "GRAD_SYNC_PIPE",
-    "GRAD_SYNC_XLA", "GRAD_SYNC_NONE",
+    "GRAD_SYNC_EP", "GRAD_SYNC_XLA", "GRAD_SYNC_NONE",
     "RULES", "spec_for", "tree_shardings", "batch_axes", "batch_spec",
     "activation_sharding", "shard_map", "optimization_barrier",
     "local_batch_size", "process_batch_slice",
@@ -212,16 +218,23 @@ def tree_shardings(axes_tree, shape_tree, mesh: Mesh, mode: str,
 
 def batch_axes(mesh: Mesh, global_batch: int, mode: str) -> Tuple[str, ...]:
     """Largest prefix of the DP axis list that divides the global batch."""
+    # 'expert' rides in every prefer list: from the batch's point of view
+    # the expert axis is just more data parallelism (tokens shard over
+    # data x expert jointly; the EP dispatch moves them to their experts
+    # with all_to_all inside the step)
     if mode == "ddp":
-        prefer = [a for a in ("pod", "data", "model") if a in mesh.axis_names]
+        prefer = [a for a in ("pod", "data", "expert", "model")
+                  if a in mesh.axis_names]
     elif mode in ("pp", "pp_dp"):
         # module-level callers see the pp FALLBACK semantics (pipelining
         # off: 'pipe' demoted to a plain data axis).  An ENGAGED pipeline
         # plan computes its dp axes over ("pod","data") only, inside
         # ParallelPlan.make — batch replicates across stages there.
-        prefer = [a for a in ("pod", "pipe", "data") if a in mesh.axis_names]
+        prefer = [a for a in ("pod", "pipe", "data", "expert")
+                  if a in mesh.axis_names]
     else:
-        prefer = [a for a in ("pod", "data") if a in mesh.axis_names]
+        prefer = [a for a in ("pod", "data", "expert")
+                  if a in mesh.axis_names]
     chosen: list = []
     size = 1
     for a in prefer:
@@ -474,13 +487,23 @@ def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
 #                      over 'pipe', activations/cotangents move by
 #                      ppermute, within-stage grads reuse bucketed_psum
 #                      over the data axes
+#   ep_overlap       — ddp MoE on a mesh with an 'expert' axis: expert
+#                      weights shard over 'expert' on their leading
+#                      experts dim, tokens move by capacity-bucketed
+#                      all_to_all (models/moe.py) with the shared-expert
+#                      FFN computed while the dispatch is in flight;
+#                      expert-leaf grads psum over the data axes only,
+#                      replicated leaves over (expert,) + data — the
+#                      same split as pipe_overlap's stage/replicated
+#                      buckets
 #   xla_fused        — the partitioner inserts collectives from the sharded
-#                      param/grad specs (tp, and every fallback: MoE,
+#                      param/grad specs (tp, and every fallback:
 #                      indivisible microbatch, tp-sharded leaves)
 #   none             — single data-parallel shard: nothing to synchronize
 GRAD_SYNC_BUCKETED = "bucketed_overlap"
 GRAD_SYNC_SCATTER = "scatter_overlap"
 GRAD_SYNC_PIPE = "pipe_overlap"
+GRAD_SYNC_EP = "ep_overlap"
 GRAD_SYNC_XLA = "xla_fused"
 GRAD_SYNC_NONE = "none"
 
@@ -515,8 +538,18 @@ class ParallelPlan:
                                    # paths split the LOCAL shard into
                                    # microbatches; under pp modes this is
                                    # the PIPELINE microbatch count M)
-    has_moe: bool = False          # MoE aux loss needs global-batch
-                                   # router statistics: see grad_sync
+    has_moe: bool = False          # MoE model: the router's batch-mean
+                                   # statistics are psum'd inside the
+                                   # shard_map'd step (models/moe.py
+                                   # route(stat_axes=...)), so MoE rides
+                                   # the overlap paths; see grad_sync
+    n_experts: int = 0             # routed expert count (feeds the
+                                   # ep_overlap engagement predicate)
+    ep_overlap_dispatch: bool = True  # ep_overlap: compute the shared-
+                                   # expert FFN between the dispatch
+                                   # all_to_all and the combine (False
+                                   # serializes it after the combine —
+                                   # the moe_overlap bench baseline)
     donate_gather: bool = True     # scatter_overlap: free the gathered
                                    # full-param buffers after forward and
                                    # re-gather in backward (remat of the
@@ -536,6 +569,7 @@ class ParallelPlan:
     def make(cls, mesh: Optional[Mesh], mode: str, global_batch: int, *,
              grad_bucket_mb: float = 25.0, overlap: bool = True,
              microbatch: int = 1, has_moe: bool = False,
+             n_experts: int = 0, ep_overlap_dispatch: bool = True,
              donate_gather: bool = True,
              pp_schedule: str = "1f1b", n_layers: int = 0,
              stageable: bool = True) -> "ParallelPlan":
@@ -543,12 +577,15 @@ class ParallelPlan:
 
         ``overlap=False`` pins the fused ``xla_fused`` baseline (the knob
         the grad_overlap/fsdp_overlap benchmarks flip); ``microbatch``
-        and ``has_moe`` feed the fallback predicate of
-        :attr:`grad_sync`.  For the pipeline modes, ``n_layers`` /
-        ``stageable`` / ``pp_schedule`` feed the static engagement test
-        (:attr:`pipe_engaged`); when pipelining cannot engage, ``pipe``
-        is demoted to a plain data axis and the ddp dispatch applies.
-        Raises ``KeyError`` on an unknown mode.
+        feeds the fallback predicate of :attr:`grad_sync`.  For the
+        pipeline modes, ``n_layers`` / ``stageable`` / ``pp_schedule``
+        feed the static engagement test (:attr:`pipe_engaged`); when
+        pipelining cannot engage, ``pipe`` is demoted to a plain data
+        axis and the ddp dispatch applies.  ``has_moe`` + ``n_experts``
+        feed the ``ep_overlap`` engagement test (:attr:`ep_engaged`);
+        when expert parallelism cannot engage, ``expert`` stays a plain
+        data axis and the MoE runs dense dispatch under the mode's
+        normal strategy.  Raises ``KeyError`` on an unknown mode.
         """
         if mode not in RULES:
             raise KeyError(f"unknown sharding mode {mode!r}; "
@@ -573,6 +610,8 @@ class ParallelPlan:
         return cls(mode=mode, mesh=mesh, global_batch=global_batch,
                    grad_bucket_mb=grad_bucket_mb, overlap=overlap,
                    microbatch=microbatch, has_moe=has_moe,
+                   n_experts=n_experts,
+                   ep_overlap_dispatch=ep_overlap_dispatch,
                    donate_gather=donate_gather,
                    pp_schedule=pp_schedule, n_layers=n_layers,
                    stageable=stageable, _dp_axes=dp, _pipe_ok=pipe_ok)
@@ -581,18 +620,24 @@ class ParallelPlan:
     def for_run(cls, run, mesh: Optional[Mesh], *,
                 grad_bucket_mb: float = 25.0,
                 overlap: bool = True,
-                donate_gather: bool = True) -> "ParallelPlan":
+                donate_gather: bool = True,
+                ep_overlap_dispatch: bool = True) -> "ParallelPlan":
         """Plan derived from a ``RunConfig`` (mode, global batch,
         microbatch count, MoE-ness, layer depth and stage compatibility
-        all read off ``run``)."""
+        all read off ``run``).  ``ep_overlap_dispatch=False`` serializes
+        the MoE shared-expert FFN after the all_to_all combine — the
+        moe_overlap benchmark's sequential reference."""
         from repro.distributed.pipeline import stage_compatible
 
+        moe = run.model.moe
         return cls.make(mesh, run.sharding, run.shape.global_batch,
                         grad_bucket_mb=grad_bucket_mb,
                         overlap=overlap,
                         donate_gather=donate_gather,
+                        ep_overlap_dispatch=ep_overlap_dispatch,
                         microbatch=run.microbatch or 1,
-                        has_moe=run.model.moe is not None,
+                        has_moe=moe is not None,
+                        n_experts=moe.n_experts if moe is not None else 0,
                         pp_schedule=getattr(run, "pp_schedule", "1f1b"),
                         n_layers=run.model.n_layers,
                         stageable=stage_compatible(run.model)[0])
@@ -649,6 +694,45 @@ class ParallelPlan:
         """Blocks per stage (the whole stack when not pipelining)."""
         return self.n_layers // self.pp_size if self.n_layers else 0
 
+    # -- expert axis -----------------------------------------------------
+    @property
+    def ep_size(self) -> int:
+        """Width of the mesh's ``expert`` axis (1 when absent)."""
+        if self.mesh is not None and "expert" in self.mesh.axis_names:
+            return self.mesh.shape["expert"]
+        return 1
+
+    @property
+    def ep_engaged(self) -> bool:
+        """True when this plan runs expert-parallel MoE dispatch: a ddp
+        plan for an MoE model on a mesh with a >1 ``expert`` axis the
+        batch divides over, an expert count the axis divides
+        (capacity dispatch needs whole local expert groups), overlap
+        on, and a microbatch count that divides the per-shard batch.
+        When False the ``expert`` axis stays a plain data axis and the
+        MoE runs dense dispatch under the mode's normal strategy."""
+        if self._pipe_ok or self.mesh is None:
+            return False
+        if self.mode != "ddp" or not self.overlap or not self.has_moe:
+            return False
+        if self.ep_size <= 1 or "expert" not in self._dp_axes:
+            return False
+        if self.n_experts <= 0 or self.n_experts % self.ep_size != 0:
+            return False
+        return self.local_batch % self.microbatch == 0 \
+            and self.local_batch >= self.microbatch
+
+    @property
+    def ep_axis(self) -> Optional[str]:
+        return "expert" if self.ep_engaged else None
+
+    @property
+    def ep_data_axes(self) -> Tuple[str, ...]:
+        """The dp axes minus ``expert`` — the sync group of the
+        expert-sharded grad leaves (each expert-axis coordinate owns a
+        distinct expert slice, so their grads must NOT sum over it)."""
+        return tuple(a for a in self._dp_axes if a != "expert")
+
     # -- specs -----------------------------------------------------------
     @property
     def rules(self) -> Dict[str, Tuple[Candidate, ...]]:
@@ -702,30 +786,80 @@ class ParallelPlan:
         The overlap paths split the LOCAL shard into microbatches (the
         standard ddp accumulation semantics), so they require
         ``local_batch % microbatch == 0``; otherwise the plan falls back
-        to the partitioner-scheduled fused path rather than failing.  MoE
-        models also fall back: the Switch aux loss is a nonlinear
-        function of batch-mean router statistics, so computing it per
-        shard would change the load-balancing pressure from global to
-        per-replica (and break sum-of-local-grads == global-grad); the
-        pjit path computes it over the global batch.  fsdp_tp falls back
-        when :attr:`tp_sharded` (see there).  The pp modes return
+        to the partitioner-scheduled fused path rather than failing.
+        MoE models ride the overlap paths: the Switch aux loss is a
+        nonlinear function of batch-MEAN router statistics, and a pmean
+        of equal-size shard means IS the global mean, so the per-shard
+        step pmeans the router's me/ce over the dp axes
+        (``models/moe.py`` ``route(stat_axes=...)``) and
+        sum-of-local-grads == global-grad holds exactly (the psum
+        transpose re-psums the cotangent; see
+        ``tests/test_moe_router_stats.py``).  On a mesh with an
+        ``expert`` axis an MoE ddp plan upgrades to ``ep_overlap``
+        (:attr:`ep_engaged`).  fsdp_tp falls back when
+        :attr:`tp_sharded` (see there).  The pp modes return
         ``pipe_overlap`` when :attr:`pipe_engaged`; otherwise ``pipe``
         has been demoted to a data axis (see :meth:`make`) and they
         dispatch exactly like ddp.  The full mode x condition table
         lives in ``docs/parallelism.md`` and is asserted in
-        ``tests/test_gradsync.py``."""
+        ``tests/test_gradsync.py``; :attr:`fallback_reason` names the
+        gate that declined a better strategy."""
         if self._pipe_ok:
             return GRAD_SYNC_PIPE
         if self.mesh is None or self.dp_size <= 1:
             return GRAD_SYNC_NONE
         divisible = self.local_batch % self.microbatch == 0 \
             and self.local_batch >= self.microbatch
-        if self.overlap and not self.has_moe and divisible:
+        if self.overlap and divisible:
+            if self.ep_engaged:
+                return GRAD_SYNC_EP
             if self.mode in ("ddp", "pp", "pp_dp"):
                 return GRAD_SYNC_BUCKETED
             if self.mode in ("fsdp", "fsdp_tp") and not self.tp_sharded:
                 return GRAD_SYNC_SCATTER
         return GRAD_SYNC_XLA
+
+    @property
+    def fallback_reason(self) -> Optional[str]:
+        """Why this plan declined a better strategy (None when the
+        preferred strategy for its mode engaged).  Answers "why did my
+        run silently fall back" from the plan print / telemetry:
+        ``xla_fused`` gets the gate that blocked every overlap path; a
+        pp mode that demoted ``pipe`` to a data axis, or an MoE plan
+        whose ``expert`` axis stayed a data axis, gets the demotion
+        reason even though an overlap strategy still engaged."""
+        gs = self.grad_sync
+        if self.mesh is None or gs == GRAD_SYNC_NONE:
+            return None
+        divisible = self.local_batch % self.microbatch == 0 \
+            and self.local_batch >= self.microbatch
+        if gs == GRAD_SYNC_XLA:
+            if not self.overlap:
+                return "overlap disabled"
+            if not divisible:
+                return "indivisible microbatch"
+            if self.tp_sharded:
+                return "tp_sharded"
+            return "tp-only mode"
+        if self.mode in ("pp", "pp_dp") and not self._pipe_ok:
+            why = "moe" if self.has_moe else \
+                "unstageable model" if not self.stageable else \
+                "no pipe axis" if ("pipe" not in self.mesh.axis_names
+                                   or self.mesh.shape["pipe"] <= 1) else \
+                "stage-indivisible depth" if (self.n_layers <= 0
+                                              or self.n_layers
+                                              % self.mesh.shape["pipe"]
+                                              != 0) else \
+                "indivisible microbatch"
+            return f"{why} (pipe demoted to data axis)"
+        if self.has_moe and self.ep_size > 1 and gs != GRAD_SYNC_EP:
+            why = "ep-indivisible experts" \
+                if self.n_experts % self.ep_size != 0 else \
+                "batch-indivisible expert axis" \
+                if "expert" not in self._dp_axes else \
+                f"mode {self.mode!r} has no ep path"
+            return f"{why} (dense dispatch, expert axis stays data)"
+        return None
 
     def _grad_leaves(self, abstract_params):
         """Grad-tree leaves at sync width: f32 accumulators when
@@ -824,6 +958,73 @@ class ParallelPlan:
             leaves, sorted(stage & set(range(len(leaves)))),
             bucket_mb=self.grad_bucket_mb)
 
+    # -- expert-parallel layout ------------------------------------------
+    def _ep_expert_dims(self, axes_tree, abstract_params):
+        """Tree (same structure as the params) of the per-leaf position
+        of the ``experts`` logical dim the expert axis shards, or -1 for
+        replicated leaves.  Driven by the logical-axes tree, same as
+        :func:`tree_shardings` — the scan-stacked block leaves carry a
+        leading ``layers`` dim, which ``axes.index`` skips naturally."""
+        ep = self.ep_size
+
+        def one(axes, leaf):
+            if axes is not None and "experts" in axes:
+                d = axes.index("experts")
+                if leaf.shape[d] % ep == 0:
+                    return d
+            return -1
+
+        return jax.tree_util.tree_map(
+            one, axes_tree, abstract_params,
+            is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+    def ep_param_specs(self, axes_tree, abstract_params):
+        """Per-leaf ``PartitionSpec`` tree of the ``ep_overlap`` state
+        layout: each leaf with an ``experts`` logical dim sharded over
+        ``expert`` on that dim, everything else replicated; None for
+        non-ep plans.  Shared between the EP step's shard_map specs and
+        the runner's state placement — same single-builder rule as
+        :meth:`scatter_param_specs`."""
+        if not self.ep_engaged:
+            return None
+        dims = self._ep_expert_dims(axes_tree, abstract_params)
+
+        def one(d, leaf):
+            if d < 0:
+                return P()
+            return P(*([None] * d), "expert")
+
+        return jax.tree_util.tree_map(one, dims, abstract_params)
+
+    def ep_sync_plan(self, axes_tree, abstract_params):
+        """The grad-sync bucket layout of an ``ep_overlap`` run, reusing
+        :class:`~repro.distributed.pipeline.PipeSyncPlan` with
+        ``expert`` in the role of ``pipe``: expert-sharded leaves (at
+        their LOCAL ``E/ep`` shapes) bucket separately and psum over the
+        data axes only, replicated leaves psum over ``(expert,) +
+        data``.  Sized at grad width like :meth:`grad_buckets`; None for
+        non-ep plans."""
+        if not self.ep_engaged:
+            return None
+        import jax.numpy as jnp
+
+        from repro.distributed import pipeline
+
+        ep = self.ep_size
+        dims = jax.tree_util.tree_leaves(
+            self._ep_expert_dims(axes_tree, abstract_params))
+        leaves, expert_idx = [], []
+        for i, (l, d) in enumerate(zip(
+                jax.tree_util.tree_leaves(abstract_params), dims)):
+            shape = tuple(l.shape)
+            if d >= 0:
+                shape = shape[:d] + (shape[d] // ep,) + shape[d + 1:]
+                expert_idx.append(i)
+            dt = jnp.float32 if self.microbatch > 1 else l.dtype
+            leaves.append(jax.ShapeDtypeStruct(shape, dt))
+        return pipeline.partition_pipe_buckets(
+            leaves, expert_idx, bucket_mb=self.grad_bucket_mb)
+
     def pipe_schedule_obj(self):
         """The static :class:`~repro.distributed.pipeline.PipeSchedule`
         tick table of this plan, or None when not pipelining."""
@@ -851,4 +1052,8 @@ class ParallelPlan:
                        pp_schedule=self.pp_schedule if self._pipe_ok
                        else None,
                        pipe_engaged=self._pipe_ok)
+        if self.has_moe or self.ep_size > 1:
+            out.update(ep_engaged=self.ep_engaged, ep_size=self.ep_size,
+                       n_experts=self.n_experts)
+        out["fallback_reason"] = self.fallback_reason
         return out

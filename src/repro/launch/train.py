@@ -88,6 +88,13 @@ def main():
                          "over a 'pipe' mesh axis (implies --sharding "
                          "pp_dp unless a pp mode was given); devices "
                          "must divide by N")
+    ap.add_argument("--expert-parallel", type=int, default=0,
+                    help="carve an N-wide 'expert' axis out of the data "
+                         "axis for MoE models: experts (and their "
+                         "optimizer state) shard over it, tokens "
+                         "dispatch with overlapped all_to_all "
+                         "(ep_overlap; requires --sharding ddp and "
+                         "n_experts divisible by N)")
     ap.add_argument("--pp-schedule", default="1f1b",
                     choices=["gpipe", "1f1b"],
                     help="pipeline microbatch schedule: gpipe holds M "
@@ -189,6 +196,10 @@ def main():
     # gradient-sync strategy (bucketed overlapped psum for multi-shard
     # ddp; the staged pipeline when --pipeline-stages carves a pipe axis)
     n_dev = jax.device_count()
+    if args.pipeline_stages > 1 and args.expert_parallel > 1:
+        ap.error("--pipeline-stages and --expert-parallel are mutually "
+                 "exclusive (the pipe and expert axes both carve the "
+                 "data axis; composing them is tracked in ROADMAP.md)")
     if args.pipeline_stages > 1:
         stages = args.pipeline_stages
         if n_dev % stages != 0:
@@ -197,6 +208,14 @@ def main():
         dp = n_dev // stages
         mesh = make_host_mesh(data=dp if gbatch % max(1, dp) == 0 else 1,
                               pipe=stages)
+    elif args.expert_parallel > 1:
+        ep = args.expert_parallel
+        if n_dev % ep != 0:
+            ap.error(f"--expert-parallel {ep} must divide the device "
+                     f"count {n_dev}")
+        dp = n_dev // ep
+        mesh = make_host_mesh(
+            data=dp if gbatch % n_dev == 0 else 1, expert=ep)
     else:
         mesh = make_host_mesh(data=n_dev if gbatch % n_dev == 0 else 1)
     runner = StepRunner(model, run, opt, mesh,
@@ -208,6 +227,8 @@ def main():
           f"comm={gs['comm_bytes']/1e6:.1f}MB/step "
           f"wire={gs['wire_bytes_per_device']/1e6:.1f}MB/dev "
           f"gather={gs['param_gather_bytes']/1e6:.1f}MB")
+    if gs.get("fallback_reason"):
+        print(f"[plan] fallback: {gs['fallback_reason']}")
     if gs.get("pipe_engaged"):
         print(f"[plan] pipeline: stages={gs['pp_stages']} "
               f"schedule={gs['pp_schedule']} "
@@ -216,6 +237,12 @@ def main():
               f"(analytic {gs['bubble_analytic']:.3f}) "
               f"act_wire={gs['act_wire_bytes_per_device']/1e6:.1f}MB/dev "
               f"buffer_depth={gs['pp_buffer_depth']}")
+    if gs.get("ep_engaged"):
+        print(f"[plan] expert-parallel: ep={gs['ep_size']} "
+              f"experts={gs['n_experts']} "
+              f"expert_buckets={gs['n_expert_buckets']} "
+              f"dispatch_wire="
+              f"{gs['dispatch_wire_bytes_per_device']/1e6:.1f}MB/dev")
 
     if args.workers == 0:
         # R3 end-to-end: measure the real compiled step time on a scratch

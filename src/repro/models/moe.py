@@ -52,8 +52,19 @@ def moe_specs(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def route(p, x, cfg: ModelConfig):
-    """x: (T, d) -> (weights (T,k), idx (T,k), aux_loss scalar)."""
+def route(p, x, cfg: ModelConfig, stat_axes=None):
+    """x: (T, d) -> (weights (T,k), idx (T,k), aux_loss scalar).
+
+    ``stat_axes`` (a mesh axis name or tuple) pmean's the router's batch
+    statistics ``me``/``ce`` before they enter the aux loss.  The Switch
+    aux is *nonlinear* in those batch means, so inside a shard_map'd
+    step the per-shard aux only matches the global one when the stats
+    themselves are global.  With the pmean in place, sum-of-local-grads
+    == global-grad holds (pmean is self-transpose up to the 1/n the
+    per-shard ``aux / dp_size`` contract already applies), which is what
+    lets MoE ride the bucketed/scatter/ep overlap paths instead of
+    falling back to ``xla_fused``.  See tests/test_moe_router_stats.py.
+    """
     m = cfg.moe
     logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
@@ -63,6 +74,9 @@ def route(p, x, cfg: ModelConfig):
     me = probs.mean(0)                                           # (E,)
     one_hot = jax.nn.one_hot(idx, m.n_experts).sum(1)            # (T, E)
     ce = one_hot.mean(0)
+    if stat_axes:
+        me = jax.lax.pmean(me, stat_axes)
+        ce = jax.lax.pmean(ce, stat_axes)
     aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_coef
     return w.astype(x.dtype), idx, aux
 
@@ -82,12 +96,12 @@ def _shared_ffn(p, x, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def apply_moe_dense(p, x, cfg: ModelConfig):
+def apply_moe_dense(p, x, cfg: ModelConfig, stat_axes=None):
     """x: (B,S,d).  Computes every expert on every token, combines by gate."""
     m = cfg.moe
     B, S, d = x.shape
     xt = x.reshape(-1, d)
-    w, idx, aux = route(p, xt, cfg)
+    w, idx, aux = route(p, xt, cfg, stat_axes=stat_axes)
     gates = jnp.zeros((xt.shape[0], m.n_experts), x.dtype)
     gates = gates.at[jnp.arange(xt.shape[0])[:, None], idx].set(w)  # (T,E)
     h = jnp.einsum("td,edf->tef", xt, p["wi"].astype(x.dtype))
@@ -110,15 +124,24 @@ def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(8, ((c + 7) // 8) * 8)  # pad to multiple of 8 lanes
 
 
-def _ep_local(p, xt, cfg: ModelConfig, axis: str, n_shards: int):
+def _ep_local(p, xt, cfg: ModelConfig, axis: str, n_shards: int, *,
+              stat_axes=None, overlap: bool = True):
     """Runs on each shard: xt (T_loc, d); expert weights already local
-    (E_loc = E / n_shards)."""
+    (E_loc = E / n_shards).
+
+    ``overlap=True`` (the default) runs the shared-expert FFN *between*
+    the dispatch ``all_to_all`` and the expert FFN — the shared FFN
+    reads only ``xt``, so it is independent compute the scheduler can
+    run while the dispatch exchange is in flight, the same trick
+    ``gradsync.py`` plays with psums against the backward.
+    ``overlap=False`` serializes it after the combine (the benchmark's
+    sequential reference); both orders compute identical values."""
     m = cfg.moe
     T = xt.shape[0]
     d = xt.shape[-1]
     E = m.n_experts
     C = _capacity(T, cfg)
-    w, idx, aux = route(p, xt, cfg)                    # router weights replicated
+    w, idx, aux = route(p, xt, cfg, stat_axes=stat_axes)  # router replicated
 
     # scatter tokens into per-expert capacity buffers -----------------------
     flat_e = idx.reshape(-1)                           # (T*k,)
@@ -136,9 +159,13 @@ def _ep_local(p, xt, cfg: ModelConfig, axis: str, n_shards: int):
     # all_to_all: (E, C, d) -> (E_loc, n_shards*C, d) on each shard.
     # tiled=True keeps the VJP well-formed (the untiled transpose rule
     # produces axis-swapped cotangents under shard_map).
-    E_loc = E // n_shards
     buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1,
                              tiled=True)
+
+    # shared-expert FFN, issued while the dispatch exchange is in flight
+    shared = None
+    if m.n_shared and overlap:
+        shared = _shared_ffn(p, xt, cfg)
 
     # local expert FFN -------------------------------------------------------
     h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(xt.dtype))
@@ -153,7 +180,7 @@ def _ep_local(p, xt, cfg: ModelConfig, axis: str, n_shards: int):
     gathered = jnp.where(keep[:, None], y[jnp.where(keep, dest, 0)], 0.0)
     out = jnp.zeros((T, d), xt.dtype).at[flat_t].add(gathered * flat_w[:, None])
     if m.n_shared:
-        out = out + _shared_ffn(p, xt, cfg)
+        out = out + (shared if shared is not None else _shared_ffn(p, xt, cfg))
     return out, aux
 
 
@@ -183,7 +210,8 @@ def apply_moe_ep(p, x, cfg: ModelConfig, mesh, *, batch_axes, expert_axis):
     )
     def run(pl, xl):
         T = xl.shape[0] * xl.shape[1]
-        out, aux = _ep_local(pl, xl.reshape(T, d), cfg, expert_axis, n_shards)
+        out, aux = _ep_local(pl, xl.reshape(T, d), cfg, expert_axis, n_shards,
+                             stat_axes=batch_axes if batch_axes else None)
         if batch_axes:
             aux = jax.lax.pmean(aux, batch_axes)
         if expert_axis:
@@ -194,9 +222,18 @@ def apply_moe_ep(p, x, cfg: ModelConfig, mesh, *, batch_axes, expert_axis):
 
 
 def apply_moe(p, x, cfg: ModelConfig, *, impl: str = "dense", mesh=None,
-              batch_axes=(), expert_axis: Optional[str] = None):
+              batch_axes=(), expert_axis: Optional[str] = None,
+              stat_axes=None, n_shards: int = 1, overlap: bool = True):
+    if impl == "ep_shard":
+        # Already inside the train step's shard_map: the expert leaves of
+        # ``p`` are local (E/ep on their ``experts`` dim) and ``x`` is the
+        # per-shard batch, so dispatch directly — no nested shard_map.
+        B, S, d = x.shape
+        out, aux = _ep_local(p, x.reshape(-1, d), cfg, expert_axis, n_shards,
+                             stat_axes=stat_axes, overlap=overlap)
+        return out.reshape(B, S, d), aux
     if impl == "ep" and mesh is not None and expert_axis is not None \
             and cfg.moe.n_experts % mesh.shape[expert_axis] == 0:
         return apply_moe_ep(p, x, cfg, mesh, batch_axes=batch_axes,
                             expert_axis=expert_axis)
-    return apply_moe_dense(p, x, cfg)
+    return apply_moe_dense(p, x, cfg, stat_axes=stat_axes)

@@ -272,6 +272,32 @@ class StepRunner:
                 sched.n_stages, sched.n_micro)
             info["pp_buffer_depth"] = sched.buffer_depth
             return info
+        ep = self.plan.ep_sync_plan(self.model.param_axes(), abstract)
+        if ep is not None:
+            from repro.analysis.hlocost import ep_dispatch_bytes
+
+            n_dp = self.plan.dp_size
+            n_data = max(1, n_dp // self.plan.ep_size)
+            buckets = ep.buckets
+            info.update(gradsync.bucket_plan_stats(buckets))
+            info["bucket_bytes"] = [b.nbytes for b in buckets]
+            info["n_expert_buckets"] = len(ep.stage)
+            info["n_replicated_buckets"] = len(ep.replicated)
+            # expert-sharded grads ring over data only; the replicated
+            # rest rings over the whole (data x expert) sync group
+            info["wire_bytes_per_device"] = (
+                gradsync.ring_allreduce_bytes(ep.stage_bytes, n_data)
+                + gradsync.ring_allreduce_bytes(ep.replicated_bytes,
+                                                n_dp))
+            n_micro = self.plan.n_micro
+            rows = self.plan.local_batch // n_micro
+            info["dispatch_wire_bytes_per_device"] = \
+                n_micro * ep_dispatch_bytes(
+                    self.model.cfg, rows * self.run.shape.seq_len,
+                    self.plan.ep_size,
+                    dtype_bytes=jnp.dtype(
+                        self.run.activation_dtype).itemsize)
+            return info
         sp = self.plan.scatter_plan(abstract)
         if sp is not None:
             n = self.plan.dp_size

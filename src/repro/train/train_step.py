@@ -20,6 +20,14 @@ Gradient synchronization is dispatched through the
   matmuls) and reduces gradients straight back to shards with one
   ``psum_scatter`` per bucket during backward — half the gradient wire
   bytes of the ddp all-reduce.
+* ``ep_overlap`` (ddp + MoE + ``expert`` mesh axis) — expert weights and
+  their optimizer moments live sharded over ``expert`` on the
+  ``experts`` dim; the batch shards over ``(data, expert)`` jointly.
+  Inside the ``shard_map``'d step each MoE layer dispatches its tokens
+  with a capacity-bucketed ``all_to_all`` over ``expert`` (the
+  shared-expert FFN overlaps the exchange), expert-sharded gradients
+  psum over the data axes only, and everything else reuses the
+  bucketed-psum machinery over all dp axes.
 * ``xla_fused`` / ``none`` — the seed pjit path: the partitioner derives
   any collectives from the param/grad shardings.
 """
@@ -39,8 +47,9 @@ from repro.core.mlm import lm_loss, mlm_loss
 from repro.distributed import gradsync
 from repro.distributed import pipeline as pipe
 from repro.distributed import sharding as shd
-from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_PIPE,
-                                        GRAD_SYNC_SCATTER, ParallelPlan)
+from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_EP,
+                                        GRAD_SYNC_PIPE, GRAD_SYNC_SCATTER,
+                                        ParallelPlan)
 from repro.models.attention import DistDecode
 from repro.models.model import Model
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -152,7 +161,7 @@ def build_attn_ctx(cfg, mesh, run: RunConfig, global_batch: int,
 
 def loss_for(model: Model, params, batch, *, run: RunConfig,
              mesh: Optional[Mesh] = None, constrain=None, shard_ctx=None,
-             axis_names=None, dp_size: int = 1):
+             axis_names=None, dp_size: int = 1, moe_ctx=None):
     """Loss + metrics.  Two calling modes:
 
     * Global (default): under pjit the reductions span the full batch —
@@ -166,16 +175,27 @@ def loss_for(model: Model, params, batch, *, run: RunConfig,
       differentiated path; param-dependent cross-device reductions appear
       solely in the (undifferentiated) metrics, where their transpose
       never runs.  Metrics are globally reduced and replicated.
+
+    ``moe_ctx`` overrides the derived MoE dispatch context wholesale
+    (the ep_overlap step passes its ``ep_shard`` context here).  When
+    derived in per-shard mode, the context gains ``stat_axes`` so the
+    router's batch statistics are pmean'd to their global values — the
+    Switch aux is nonlinear in those means, so this is what keeps
+    sum-of-local-grads == global-grad for MoE (see ``route``).
     """
     cfg = model.cfg
     if shard_ctx is None and mesh is not None:
         shard_ctx = build_attn_ctx(cfg, mesh, run,
                                    batch["tokens"].shape[0],
                                    batch["tokens"].shape[1])
+    if moe_ctx is None:
+        moe_ctx = _moe_ctx(model, mesh, run, batch["tokens"].shape[0])
+        if moe_ctx is not None and axis_names is not None:
+            moe_ctx = {**moe_ctx, "stat_axes": axis_names}
     h, _, aux = model.apply(
         params, batch, mode="train", remat=run.remat,
         use_pallas=run.use_pallas, act_dtype=_act_dtype(run),
-        moe_ctx=_moe_ctx(model, mesh, run, batch["tokens"].shape[0]),
+        moe_ctx=moe_ctx,
         constrain=constrain, return_hidden=True, shard_ctx=shard_ctx,
     )
     labels = batch["labels"]
@@ -232,6 +252,8 @@ def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
         return _make_scatter_fsdp_step(model, run, opt, plan)
     if plan.grad_sync == GRAD_SYNC_PIPE:
         return _make_pipeline_step(model, run, opt, plan)
+    if plan.grad_sync == GRAD_SYNC_EP:
+        return _make_ep_step(model, run, opt, plan)
     constrain = None
     if mesh is not None:
         constrain = shd.activation_sharding(
@@ -299,6 +321,24 @@ def make_grad_fn(model: Model, run: RunConfig,
         # compare against the fused reference leaf-for-leaf
         return shd.shard_map(
             scatter_body, mesh=plan.mesh,
+            in_specs=(pspecs, _dp_batch_spec(plan)),
+            out_specs=(P(), pspecs, P()), check_vma=False)
+    if plan.grad_sync == GRAD_SYNC_EP:
+        accum, axis, _ = _ep_accum(model, run, plan)
+        pspecs = plan.ep_param_specs(
+            model.param_axes(),
+            model.abstract(jnp.dtype(run.param_dtype)))
+
+        def ep_body(params, batch):
+            loss, grads, metrics = accum(params, batch)
+            return jax.lax.psum(loss, axis), grads, metrics
+
+        # expert grads come out as per-shard E/ep slices; the
+        # P('expert')-on-experts out specs reassemble the full expert
+        # gradient tree, so callers compare against the dense one-hot
+        # oracle leaf-for-leaf
+        return shd.shard_map(
+            ep_body, mesh=plan.mesh,
             in_specs=(pspecs, _dp_batch_spec(plan)),
             out_specs=(P(), pspecs, P()), check_vma=False)
     if plan.grad_sync == GRAD_SYNC_PIPE:
@@ -489,6 +529,79 @@ def _make_scatter_fsdp_step(model: Model, run: RunConfig, opt: AdamWConfig,
 
 
 # ---------------------------------------------------------------------------
+# Expert-parallel step (ep_overlap: models/moe.py all_to_all dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _ep_accum(model: Model, run: RunConfig, plan: ParallelPlan):
+    """Shared core of the ``ep_overlap`` paths (train step and
+    ``make_grad_fn``): per-shard loss with ``ep_shard`` MoE dispatch ->
+    local microbatch accumulation -> split grad sync.  Expert-sharded
+    leaves (local ``E/ep`` slices) psum over the data axes only — their
+    expert slice lives on exactly this expert rank — while everything
+    else rides the bucketed psum over all dp axes; structurally the
+    pipeline sync with ``expert`` in the role of ``pipe``, so it reuses
+    :func:`pipe.pipe_grad_sync` wholesale.  Returns ``(accum(params,
+    local_batch) -> (loss, grads, metrics), axis, sync_plan)``;
+    ``accum`` must run INSIDE shard_map over the plan's mesh."""
+    axis = _axis_arg(plan.dp_axes)
+    abstract = model.abstract(jnp.dtype(run.param_dtype))
+    sp = plan.ep_sync_plan(model.param_axes(), abstract)
+    moe_ctx = {"impl": "ep_shard", "expert_axis": "expert",
+               "n_shards": plan.ep_size, "stat_axes": axis,
+               "overlap": plan.ep_overlap_dispatch}
+
+    def accum(params, batch):
+        def loss_fn(p, b):
+            return loss_for(model, p, b, run=run, mesh=None,
+                            axis_names=axis, dp_size=plan.dp_size,
+                            moe_ctx=moe_ctx)
+
+        return accumulate_grads(
+            loss_fn, params, batch, run.microbatch or 1,
+            sync_grads=lambda g: pipe.pipe_grad_sync(
+                g, sp, "expert", plan.ep_data_axes))
+
+    return accum, axis, sp
+
+
+def _make_ep_step(model: Model, run: RunConfig, opt: AdamWConfig,
+                  plan: ParallelPlan) -> Callable:
+    """The expert-parallel (ep_overlap) train step.
+
+    Expert weights — and their Adam moments — live SHARDED over
+    ``expert`` on the ``experts`` dim (``ParallelPlan.ep_param_specs``;
+    router / shared experts / everything else replicated), and the
+    batch shards over ``(data, expert)`` jointly, so the expert axis
+    pulls double duty: batch width in attention / dense compute, expert
+    width inside each MoE layer's ``all_to_all`` dispatch.  Inside one
+    ``shard_map``: each MoE layer scatters its local tokens into
+    capacity buffers, exchanges them over ``expert`` (overlapping the
+    shared-expert FFN), runs its local experts, and combines; the
+    optimizer updates only this rank's expert slice with a
+    globally-assembled clipping norm.
+    """
+    accum, _, sp = _ep_accum(model, run, plan)
+    pspecs = plan.ep_param_specs(
+        model.param_axes(), model.abstract(jnp.dtype(run.param_dtype)))
+    state_spec = {"params": pspecs,
+                  "opt": {"mu": pspecs, "nu": pspecs, "step": P()}}
+
+    def body(state, batch):
+        _, grads, metrics = accum(state["params"], batch)
+        gnorm = pipe.pipe_global_norm(grads, sp, "expert")
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"], grad_norm=gnorm)
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return shd.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(state_spec, _dp_batch_spec(plan)),
+        out_specs=(state_spec, P()), check_vma=False)
+
+
+# ---------------------------------------------------------------------------
 # Pipeline-parallel step (pp / pp_dp: distributed/pipeline.py)
 # ---------------------------------------------------------------------------
 
@@ -624,7 +737,10 @@ def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
     of the scatter step — optimizer state included, so each device
     stores and updates only its 1/dp slice (ZeRO-3).  Under a
     ``pipe_overlap`` plan it is the stage layout: block-stack leaves
-    (and their moments) split over ``pipe`` on the layers dim."""
+    (and their moments) split over ``pipe`` on the layers dim.  Under an
+    ``ep_overlap`` plan it is the expert layout: leaves with an
+    ``experts`` logical dim (and their moments) split over ``expert``
+    on that dim, the rest replicated."""
     if plan is not None and plan.grad_sync == GRAD_SYNC_SCATTER:
         specs = plan.scatter_param_specs(
             model.abstract(jnp.dtype(run.param_dtype)))
@@ -632,6 +748,12 @@ def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
             lambda s: NamedSharding(mesh, s), specs)
     elif plan is not None and plan.grad_sync == GRAD_SYNC_PIPE:
         specs = plan.pipe_param_specs(
+            model.abstract(jnp.dtype(run.param_dtype)))
+        p_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs)
+    elif plan is not None and plan.grad_sync == GRAD_SYNC_EP:
+        specs = plan.ep_param_specs(
+            model.param_axes(),
             model.abstract(jnp.dtype(run.param_dtype)))
         p_sh = jax.tree_util.tree_map(
             lambda s: NamedSharding(mesh, s), specs)

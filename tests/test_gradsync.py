@@ -18,9 +18,9 @@ import pytest
 
 from _subproc import run_py
 from repro.distributed import gradsync
-from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_NONE,
-                                        GRAD_SYNC_SCATTER, GRAD_SYNC_XLA,
-                                        ParallelPlan)
+from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_EP,
+                                        GRAD_SYNC_NONE, GRAD_SYNC_SCATTER,
+                                        GRAD_SYNC_XLA, ParallelPlan)
 
 
 # ---------------------------------------------------------------------------
@@ -187,19 +187,27 @@ def test_plan_indivisible_microbatch_falls_back_to_fused():
     assert ok.grad_sync == GRAD_SYNC_BUCKETED
 
 
-def test_plan_moe_falls_back_to_fused():
-    # the Switch aux loss is nonlinear in batch-mean router statistics:
-    # per-shard aux would change load balancing from global to
-    # per-replica, so ddp MoE stays on the pjit path
+def test_plan_moe_rides_overlap_paths():
+    # the Switch aux loss is nonlinear in batch-mean router statistics,
+    # which used to force every MoE config onto the pjit path.  The
+    # router now pmean's its me/ce statistics inside the shard_map'd
+    # step (tests/test_moe_router_stats.py proves the aux then equals
+    # the global value), so MoE composes with the bucketed/scatter
+    # overlap strategies like any dense model
     plan = ParallelPlan.make(FakeMesh(data=4), "ddp", 16, has_moe=True)
-    assert plan.grad_sync == GRAD_SYNC_XLA
+    assert plan.grad_sync == GRAD_SYNC_BUCKETED
+    assert plan.fallback_reason is None
+    assert ParallelPlan.make(FakeMesh(data=4), "fsdp", 16,
+                             has_moe=True).grad_sync == GRAD_SYNC_SCATTER
     from repro.configs import get_config, reduced
     from repro.configs.base import RunConfig, ShapeConfig
 
     moe_cfg = reduced(get_config("mixtral-8x7b"))
     run = RunConfig(model=moe_cfg, shape=ShapeConfig("t", 32, 16, "train"),
                     sharding="ddp")
-    assert ParallelPlan.for_run(run, FakeMesh(data=4)).has_moe
+    plan = ParallelPlan.for_run(run, FakeMesh(data=4))
+    assert plan.has_moe and plan.n_experts == moe_cfg.moe.n_experts
+    assert plan.grad_sync == GRAD_SYNC_BUCKETED
 
 
 def test_plan_buckets_sized_at_f32_under_accumulation():
@@ -224,12 +232,13 @@ STRATEGY_TABLE = [
     ("ddp", dict(data=4, model=2), 16, 1, False, GRAD_SYNC_BUCKETED),
     ("ddp", dict(data=4), 16, 4, False, GRAD_SYNC_BUCKETED),
     ("ddp", dict(data=4), 8, 4, False, GRAD_SYNC_XLA),    # 2 % 4 != 0
-    ("ddp", dict(data=4), 16, 1, True, GRAD_SYNC_XLA),    # MoE aux loss
+    # MoE rides the bucketed path: router stats are psum'd per-shard
+    ("ddp", dict(data=4), 16, 1, True, GRAD_SYNC_BUCKETED),
     ("ddp", dict(data=1, model=1), 8, 1, False, GRAD_SYNC_NONE),
     ("fsdp", dict(data=4), 16, 1, False, GRAD_SYNC_SCATTER),
     ("fsdp", dict(data=4), 16, 4, False, GRAD_SYNC_SCATTER),
     ("fsdp", dict(data=4), 8, 4, False, GRAD_SYNC_XLA),   # 2 % 4 != 0
-    ("fsdp", dict(data=4), 16, 1, True, GRAD_SYNC_XLA),   # MoE aux loss
+    ("fsdp", dict(data=4), 16, 1, True, GRAD_SYNC_SCATTER),  # MoE ok
     ("fsdp", dict(data=1), 8, 1, False, GRAD_SYNC_NONE),
     ("fsdp_tp", dict(data=4, model=1), 16, 1, False, GRAD_SYNC_SCATTER),
     ("fsdp_tp", dict(data=2, model=2), 16, 1, False, GRAD_SYNC_XLA),
@@ -261,9 +270,10 @@ PP_STRATEGY_TABLE = [
     # and so does the demoted-ddp path (2 % 8 != 0) -> fused
     ("pp_dp", dict(pipe=2, data=4), 16, 8, False, 4, True,
      GRAD_SYNC_XLA),
-    # MoE: no pipelining AND no bucketed fallback (aux loss is global)
+    # MoE: pipelining declines (stage_compatible says no), but the
+    # demoted-ddp path now buckets — router stats are psum'd per-shard
     ("pp_dp", dict(pipe=2, data=4), 16, 2, True, 4, True,
-     GRAD_SYNC_XLA),
+     GRAD_SYNC_BUCKETED),
     # stage-indivisible depth: pipe demoted to a data axis -> ddp
     # dispatch over ('pipe','data')
     ("pp_dp", dict(pipe=2, data=4), 16, 2, False, 5, True,
@@ -291,6 +301,82 @@ def test_plan_strategy_table_pp(mode, axes, gb, micro, moe, nl, stg,
                              microbatch=micro, has_moe=moe,
                              n_layers=nl, stageable=stg)
     assert plan.grad_sync == expect, plan.describe()
+
+
+# the expert-axis half of the fallback spec (docs/parallelism.md
+# table): ep_overlap engages only for ddp with overlap on, a real
+# expert axis carrying part of the batch, and an expert count divisible
+# by the axis width; every other combination keeps 'expert' as a plain
+# data axis with dense MoE dispatch under the mode's normal strategy.
+EP_STRATEGY_TABLE = [
+    # mode, axes, gb, micro, has_moe, n_experts -> strategy, reason
+    ("ddp", dict(data=2, expert=2), 16, 1, True, 4, GRAD_SYNC_EP, None),
+    ("ddp", dict(data=2, expert=2), 16, 2, True, 8, GRAD_SYNC_EP, None),
+    # expert count does not divide the axis: dense dispatch, bucketed
+    ("ddp", dict(data=2, expert=2), 16, 1, True, 3, GRAD_SYNC_BUCKETED,
+     "ep-indivisible experts"),
+    # no MoE at all: the expert axis is just more data parallelism
+    ("ddp", dict(data=2, expert=2), 16, 1, False, 0, GRAD_SYNC_BUCKETED,
+     None),
+    # fsdp has no ep path: MoE runs dense under scatter_overlap
+    ("fsdp", dict(data=2, expert=2), 16, 1, True, 4, GRAD_SYNC_SCATTER,
+     "no ep path"),
+    # batch can't shard over the expert axis (2 % (2*2) != 0): expert
+    # drops out of the dp axes, ep declines, bucketed over data only
+    ("ddp", dict(data=2, expert=2), 2, 1, True, 4, GRAD_SYNC_BUCKETED,
+     "batch-indivisible expert axis"),
+    # microbatch does not divide the per-shard batch: ep AND bucketed
+    # both decline -> fused
+    ("ddp", dict(data=2, expert=2), 16, 3, True, 4, GRAD_SYNC_XLA,
+     "indivisible microbatch"),
+]
+
+
+@pytest.mark.parametrize("mode,axes,gb,micro,moe,ne,expect,reason",
+                         EP_STRATEGY_TABLE)
+def test_plan_strategy_table_ep(mode, axes, gb, micro, moe, ne, expect,
+                                reason):
+    plan = ParallelPlan.make(FakeMesh(**axes), mode, gb,
+                             microbatch=micro, has_moe=moe, n_experts=ne)
+    assert plan.grad_sync == expect, plan.describe()
+    if reason is None:
+        assert plan.fallback_reason is None, plan.fallback_reason
+    else:
+        assert reason in (plan.fallback_reason or ""), plan.describe()
+    assert plan.ep_engaged == (expect == GRAD_SYNC_EP)
+
+
+def test_plan_ep_describe_and_param_specs():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    plan = ParallelPlan.make(FakeMesh(data=2, expert=2), "ddp", 16,
+                             has_moe=True, n_experts=4)
+    d = plan.describe()
+    assert d["grad_sync"] == GRAD_SYNC_EP
+    assert d["ep_engaged"] and d["ep_size"] == 2 and d["n_experts"] == 4
+    assert d["fallback_reason"] is None
+    # expert-dim leaves shard over 'expert' at their experts position;
+    # everything else replicates
+    axes_tree = {"wi": ("experts", "embed", "ff"),
+                 "stacked": ("layers", "experts", "embed", "ff"),
+                 "router": ("embed", None)}
+    abstract = {"wi": jax.ShapeDtypeStruct((4, 8, 16), jnp.float32),
+                "stacked": jax.ShapeDtypeStruct((2, 4, 8, 16),
+                                                jnp.float32),
+                "router": jax.ShapeDtypeStruct((8, 4), jnp.float32)}
+    specs = plan.ep_param_specs(axes_tree, abstract)
+    assert specs["wi"] == P("expert")
+    assert specs["stacked"] == P(None, "expert")
+    assert specs["router"] == P()
+    sp = plan.ep_sync_plan(axes_tree, abstract)
+    # dict flatten order: router(0), stacked(1), wi(2); the two
+    # expert-dim leaves bucket separately, sized at their LOCAL E/ep
+    # slices, the router rides the replicated buckets at full size
+    assert sorted(sp.stage_indices) == [1, 2]
+    assert sp.stage_bytes == (2 * 2 * 8 * 16 + 2 * 8 * 16) * 4
+    assert sp.replicated_bytes == 8 * 4 * 4
 
 
 def test_pp_fallback_demotes_pipe_to_data_axis():
