@@ -391,3 +391,53 @@ def ep_dispatch_bytes(cfg, local_tokens: int, ep: int, *,
     payload = cfg.moe.n_experts * C * cfg.d_model * dtype_bytes
     # two trips (dispatch + return) per MoE layer
     return 2.0 * n_moe * all_to_all_bytes(payload, ep)
+
+
+def paged_decode_read_bytes(cfg, pos: int, *, page: int, max_seq: int,
+                            dtype_bytes: int = 2) -> Dict[str, float]:
+    """Analytic KV bytes ONE decode step streams for ONE sequence at
+    query position ``pos``, under the paged cache vs the contiguous
+    (worst-case padded to ``max_seq``) cache.
+
+    The decode step is memory-bound, so these bytes ARE its roofline
+    cost (``Cost.bytes`` dominates; the matmul term is tiny at S=1):
+    per full-attention layer the contiguous path streams the whole
+    ``max_seq`` allocation while the paged kernel reads only the
+    ``ceil((pos+1)/page)`` live pages — page-granular, so the gap is
+    exactly the padding waste ``max_seq - ceil((pos+1)/page)*page``.
+    Sliding-window rings, SSM states and MLA latents are costed with
+    the same per-family shapes the cache actually stores (rings and
+    states are identical under both layouts — paging only changes the
+    growing leaves).  Used by docs/serving.md's paged-vs-contiguous
+    math and the serve benchmark's utilization commentary.
+    """
+    from repro.configs.base import ATTN, MAMBA, MLA, SHARED_ATTN
+    from repro.models.ssm import ssm_dims
+
+    live = -(-(pos + 1) // page) * page     # pages rounded up, in tokens
+    kv_tok = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes  # k+v/token
+    paged = contiguous = 0.0
+    for g in cfg.schedule:
+        for spec in g.pattern:
+            n = g.repeats
+            if spec.kind in (ATTN, SHARED_ATTN):
+                if spec.window is not None:
+                    w = min(spec.window, max_seq) * kv_tok
+                    paged += n * w
+                    contiguous += n * w
+                else:
+                    paged += n * live * kv_tok
+                    contiguous += n * max_seq * kv_tok
+            elif spec.kind == MLA:
+                m = cfg.mla
+                lat = (m.kv_lora_rank + m.qk_rope_head_dim) * dtype_bytes
+                paged += n * live * lat
+                contiguous += n * max_seq * lat
+            elif spec.kind == MAMBA:
+                _, H, Pd, G, N = ssm_dims(cfg)
+                K = cfg.ssm.d_conv
+                st = (H * N * Pd * 4                      # f32 state
+                      + (K - 1) * (H * Pd + 2 * G * N) * dtype_bytes)
+                paged += n * st
+                contiguous += n * st
+    return {"paged": paged, "contiguous": contiguous}

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.fused_xent import fused_xent as _fused_xent
+from repro.kernels.paged_attention import paged_attention_fwd
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 PALLAS_INTERPRET = True  # CPU container; launcher sets False on real TPU
@@ -51,6 +52,22 @@ def _fa_bwd(causal, window, softcap, scale, res, g):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    window: Optional[int] = None, softcap: float = 0.0,
+                    scale: Optional[float] = None):
+    """Decode-only paged attention (no vjp: serving never differentiates
+    through it).  q:(B,H,D) against (NP,P,Hkv,D) pools via (B,maxp)
+    block tables; see ``kernels/paged_attention.py``."""
+    return paged_attention_fwd(q, k_pages, v_pages, block_tables, seq_lens,
+                               window=window, softcap=softcap, scale=scale,
+                               interpret=PALLAS_INTERPRET)
 
 
 # ---------------------------------------------------------------------------

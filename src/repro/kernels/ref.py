@@ -33,6 +33,46 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return o.reshape(B, S, H, D)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
+                        window: Optional[int] = None, softcap: float = 0.0,
+                        scale: Optional[float] = None):
+    """Dense oracle for single-token decode attention through a page table.
+
+    q:(B,H,D) — one query per sequence.
+    k_pages/v_pages:(NP,P,Hkv,D) — the paged KV pool.
+    block_tables:(B,maxp) int32 — physical page id of each sequence's
+    j-th logical page (logical key position p lives in table slot p//P at
+    offset p%P; unused slots may point anywhere — masking hides them).
+    seq_lens:(B,) int32 — the CURRENT query position per sequence; key
+    positions 0..seq_lens[b] inclusive are valid (the new token's K/V is
+    written into the pool before attention runs).
+
+    GQA by head repeat; sliding window and gemma-style logit softcap as
+    in :func:`flash_attention_ref`.  Returns (B,H,D).
+    """
+    B, H, D = q.shape
+    NP, P, Hkv, _ = k_pages.shape
+    maxp = block_tables.shape[1]
+    rep = H // Hkv
+    scale = D**-0.5 if scale is None else scale
+    # gather: (B, maxp, P, Hkv, D) -> (B, maxp*P, Hkv, D)
+    k = k_pages[block_tables].reshape(B, maxp * P, Hkv, D)
+    v = v_pages[block_tables].reshape(B, maxp * P, Hkv, D)
+    qr = q.reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bkhd->bhrk", qr, k).astype(jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kp = jnp.arange(maxp * P)[None, :]            # logical key positions
+    pos = seq_lens[:, None]
+    ok = kp <= pos
+    if window is not None:
+        ok &= kp > pos - window
+    s = jnp.where(ok[:, None, None], s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrk,bkhd->bhrd", w.astype(v.dtype), v)
+    return o.reshape(B, H, D)
+
+
 def ssd_ref(x, dt, A, B, C, chunk: int, initial_state=None):
     """Delegates to the model-zoo chunked oracle (single source of truth)."""
     from repro.models.ssm import ssd_chunked

@@ -204,9 +204,18 @@ def _theta(cfg: ModelConfig, spec: LayerSpec) -> float:
 def apply_attn(p, h, cfg: ModelConfig, spec: LayerSpec, *, positions,
                mode: str, cache=None, pos=None, causal: bool = True,
                use_pallas: bool = False, dist: Optional[DistDecode] = None,
-               kv_override=None, shard_ctx=None):
+               kv_override=None, shard_ctx=None, paged=None):
     """Returns (out, new_cache).  ``kv_override=(k,v)`` is used for
     cross-attention (keys/values from the encoder, no rope, no cache write).
+
+    ``paged`` routes the serving engine's paged-KV paths
+    (serve/paged_cache.py).  In decode it is ``{"tables": (B,maxp) int32,
+    "page": P, "use_pallas": bool}`` with ``pos`` a per-slot (B,) array:
+    the layer's cache leaves are page POOLS (NP,P,Hkv,D) written through
+    the block table, and sliding-window layers use per-slot dense ring
+    buffers (``pos`` leaf shaped (B,W)).  In prefill it is ``{"length":
+    L}`` — the true (unpadded) prompt length, so the ring fill stays
+    correct under right-padded prompt buckets.
 
     ``shard_ctx`` = {"q": fn, "kv": fn} enables context-parallel attention:
     q is sequence-sharded, k/v replicated over the model axis, so the score
@@ -251,7 +260,8 @@ def apply_attn(p, h, cfg: ModelConfig, spec: LayerSpec, *, positions,
                            window=spec.window)
         new_cache = None
         if mode == "prefill" and kv_override is None:
-            new_cache = _fill_cache(k, v, spec, cfg)
+            length = paged.get("length") if paged else None
+            new_cache = _fill_cache(k, v, spec, cfg, length=length)
         out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(h.dtype))
         return out, new_cache
 
@@ -266,9 +276,24 @@ def apply_attn(p, h, cfg: ModelConfig, spec: LayerSpec, *, positions,
     assert cache is not None and pos is not None
     if cfg.pos_type == "rope":
         th = _theta(cfg, spec)
-        pos_arr = jnp.full((B, 1), pos, jnp.int32)
+        if paged is not None:
+            pos_arr = pos.reshape(B, 1)       # per-slot positions
+        else:
+            pos_arr = jnp.full((B, 1), pos, jnp.int32)
         q = apply_rope(q, pos_arr, th)
         k_new = apply_rope(k_new, pos_arr, th)
+
+    if paged is not None and "tables" in paged:
+        if spec.window is not None:
+            # per-slot dense ring buffer — a fixed-size pool row per slot
+            new_cache, mask, k_all, v_all = _sliding_update_paged(
+                cache, k_new, v_new, pos, spec.window)
+            o = gqa_attend(q, k_all, v_all, mask, cfg)
+        else:
+            o, new_cache = _paged_attend(
+                q, k_new, v_new, cache, pos, cfg, paged)
+        out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(h.dtype))
+        return out, new_cache
 
     if spec.window is not None:
         new_cache, mask, k_all, v_all = _sliding_update(
@@ -290,7 +315,72 @@ def apply_attn(p, h, cfg: ModelConfig, spec: LayerSpec, *, positions,
     return out, new_cache
 
 
-def _fill_cache(k, v, spec: LayerSpec, cfg: ModelConfig):
+def _paged_attend(q, k_new, v_new, cache, pos, cfg: ModelConfig, paged):
+    """Scatter the new token's K/V into the page pool through the block
+    table, then attend the (B,1,H,D) query over all live pages.
+
+    ``cache`` = {"k": (NP,P,Hkv,D), "v": ...} — this layer's pools.
+    ``pos`` (B,) per-slot positions.  Distinct active slots hold distinct
+    pages (the allocator's invariant), so the scatter is race-free;
+    inactive slots write to the reserved trash page 0.
+    """
+    P = paged["page"]
+    tables = paged["tables"]
+    B = q.shape[0]
+    b_idx = jnp.arange(B)
+    page = tables[b_idx, pos // P]                 # (B,) physical pages
+    off = pos % P
+    kp = cache["k"].at[page, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    vp = cache["v"].at[page, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    if paged.get("use_pallas"):
+        from repro.kernels import ops as kops
+
+        o = kops.paged_attention(
+            q[:, 0], kp, vp, tables, pos, window=None,
+            softcap=cfg.attn_logit_softcap, scale=_scale(cfg, q.shape[-1]))
+    else:
+        from repro.kernels.ref import paged_attention_ref
+
+        o = paged_attention_ref(
+            q[:, 0], kp, vp, tables, pos, window=None,
+            softcap=cfg.attn_logit_softcap, scale=_scale(cfg, q.shape[-1]))
+    return o[:, None], {"k": kp, "v": vp}
+
+
+def _sliding_update_paged(cache, k_new, v_new, pos, window: int):
+    """Per-slot ring update: like :func:`_sliding_update` but every slot
+    carries its own position (continuous batching), so the ``pos`` leaf
+    is (B, W) and the ring write index differs per row."""
+    B = k_new.shape[0]
+    b_idx = jnp.arange(B)
+    slot = pos % window
+    k = cache["k"].at[b_idx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[b_idx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    pos_ids = cache["pos"].at[b_idx, slot].set(pos)
+    p = pos[:, None]
+    valid = (pos_ids >= 0) & (pos_ids <= p) & (pos_ids > p - window)
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None].astype(jnp.float32)
+    return {"k": k, "v": v, "pos": pos_ids}, mask, k, v
+
+
+def _fill_cache(k, v, spec: LayerSpec, cfg: ModelConfig, length=None):
+    if spec.window is not None and length is not None:
+        # ragged fill: the prompt really ends at ``length`` (traced), the
+        # buffer is right-padded to S.  Ring slot s gets the largest
+        # position p <= length-1 with p % W == s (and >= length-W); pad
+        # positions never enter the ring.
+        W = spec.window
+        s_ids = jnp.arange(W, dtype=jnp.int32)
+        p_ids = (length - 1) - ((length - 1 - s_ids) % W)
+        ok = p_ids >= 0
+        idx = jnp.clip(p_ids, 0, k.shape[1] - 1)
+        kc = jnp.take(k, idx, axis=1)
+        vc = jnp.take(v, idx, axis=1)
+        zero = jnp.zeros((), k.dtype)
+        kc = jnp.where(ok[None, :, None, None], kc, zero)
+        vc = jnp.where(ok[None, :, None, None], vc, zero)
+        return {"k": kc, "v": vc,
+                "pos": jnp.where(ok, p_ids, jnp.int32(-1))}
     if spec.window is not None:
         W = spec.window
         S = k.shape[1]
@@ -350,7 +440,7 @@ def _mla_ckv(p, h, cfg: ModelConfig, positions):
 
 def apply_mla(p, h, cfg: ModelConfig, spec: LayerSpec, *, positions,
               mode: str, cache=None, pos=None, use_pallas: bool = False,
-              dist: Optional[DistDecode] = None):
+              dist: Optional[DistDecode] = None, paged=None):
     m = cfg.mla
     B = h.shape[0]
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
@@ -403,9 +493,40 @@ def apply_mla(p, h, cfg: ModelConfig, spec: LayerSpec, *, positions,
 
     # ------------------------------------------------------------- decode
     assert cache is not None and pos is not None
-    pos_arr = jnp.full((B, 1), pos, jnp.int32)
+    if paged is not None and "tables" in paged:
+        pos_arr = pos.reshape(B, 1)
+    else:
+        pos_arr = jnp.full((B, 1), pos, jnp.int32)
     q_nope, q_rope = _mla_q(p, h, cfg, pos_arr)       # (B,1,H,·)
     ckv_new, kr_new = _mla_ckv(p, h, cfg, pos_arr)    # (B,1,r) (B,1,rope)
+    if paged is not None and "tables" in paged:
+        # latent cache through the page pool: scatter the new (ckv, kr)
+        # at (page, offset), gather all live pages per slot, score in the
+        # absorbed form with a per-slot causal mask
+        P = paged["page"]
+        tables = paged["tables"]
+        maxp = tables.shape[1]
+        b_idx = jnp.arange(B)
+        page = tables[b_idx, pos // P]
+        off = pos % P
+        ckv_p = cache["ckv"].at[page, off].set(
+            ckv_new[:, 0].astype(cache["ckv"].dtype))
+        kr_p = cache["kr"].at[page, off].set(
+            kr_new[:, 0].astype(cache["kr"].dtype))
+        ckv = ckv_p[tables].reshape(B, maxp * P, -1)
+        kr = kr_p[tables].reshape(B, maxp * P, -1)
+        q_eff = jnp.einsum("bqhe,rhe->bqhr", q_nope, p["wuk"].astype(h.dtype))
+        s = (
+            jnp.einsum("bqhr,bkr->bhqk", q_eff, ckv)
+            + jnp.einsum("bqhe,bke->bhqk", q_rope, kr)
+        ).astype(jnp.float32) * scale
+        kpos = jnp.arange(maxp * P)[None, None, None]
+        s = s + jnp.where(kpos <= pos[:, None, None, None], 0.0, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(h.dtype)
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ckv)
+        o = jnp.einsum("bqhr,rhe->bqhe", o_lat, p["wuv"].astype(h.dtype))
+        out = jnp.einsum("bshe,hed->bsd", o, p["wo"].astype(h.dtype))
+        return out, {"ckv": ckv_p, "kr": kr_p}
     ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
     kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
     # absorbed form: score against the latent directly

@@ -91,7 +91,7 @@ def apply_block(bp, shared, h, cfg: ModelConfig, spec: LayerSpec, *,
                 positions, mode: str, cache=None, pos=None,
                 encoder_out=None, causal: bool = True,
                 use_pallas: bool = False, dist=None, moe_ctx=None,
-                shard_ctx=None):
+                shard_ctx=None, paged=None):
     """Returns (h, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -106,12 +106,12 @@ def apply_block(bp, shared, h, cfg: ModelConfig, spec: LayerSpec, *,
     elif spec.kind == MLA:
         mx, mc = apply_mla(p["mixer"], x, cfg, spec, positions=positions,
                            mode=mode, cache=cache.get("mixer"), pos=pos,
-                           use_pallas=use_pallas, dist=dist)
+                           use_pallas=use_pallas, dist=dist, paged=paged)
     else:  # ATTN / SHARED_ATTN
         mx, mc = apply_attn(p["mixer"], x, cfg, spec, positions=positions,
                             mode=mode, cache=cache.get("mixer"), pos=pos,
                             causal=causal, use_pallas=use_pallas, dist=dist,
-                            shard_ctx=shard_ctx)
+                            shard_ctx=shard_ctx, paged=paged)
     if mc is not None:
         new_cache["mixer"] = mc
     if cfg.post_norms and spec.kind != MAMBA and spec.kind != SHARED_ATTN:
@@ -154,7 +154,8 @@ def apply_group(pg, shared, h, cfg: ModelConfig, group: ScheduleGroup, *,
                 positions, mode: str, cache_g=None, pos=None,
                 encoder_out=None, causal: bool = True, remat: bool = False,
                 use_pallas: bool = False, dist=None, moe_ctx=None,
-                constrain: Optional[Callable] = None, shard_ctx=None):
+                constrain: Optional[Callable] = None, shard_ctx=None,
+                paged=None):
     """Scan the group over its ``repeats`` axis.
 
     Returns (h, new_cache_g, aux_sum).
@@ -166,7 +167,7 @@ def apply_group(pg, shared, h, cfg: ModelConfig, group: ScheduleGroup, *,
             mode=mode, cache=cl_pi, pos=pos,
             encoder_out=encoder_out, causal=causal,
             use_pallas=use_pallas, dist=dist, moe_ctx=moe_ctx,
-            shard_ctx=shard_ctx,
+            shard_ctx=shard_ctx, paged=paged,
         )
         if constrain is not None:
             out = (constrain(out[0]), out[1], out[2])

@@ -84,11 +84,18 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
             cache=None, use_pallas: bool = False, remat: bool = False,
             dist=None, moe_ctx=None, constrain: Optional[Callable] = None,
             act_dtype=jnp.float32, return_hidden: bool = False,
-            shard_ctx=None):
+            shard_ctx=None, paged=None):
     """Returns (logits | hidden, new_cache, aux).
 
     batch keys: tokens (B,S) [decode: (B,1)], optional image_embeds,
-    audio_frames, pos (decode write index, scalar int32).
+    audio_frames, pos (decode write index: scalar int32, or a per-slot
+    (B,) array under the paged continuous-batching engine).
+
+    ``paged`` is the paged-KV serving context threaded down to the
+    attention layers (see serve/paged_cache.py): in decode mode the
+    cache leaves are page pools addressed through ``paged["tables"]``;
+    in prefill mode ``paged["length"]`` carries the true prompt length
+    of a right-padded prompt bucket.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -97,7 +104,10 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
 
     h = embed_tokens(params["embed"], tokens, cfg, act_dtype)
     if mode == "decode":
-        positions = jnp.full((B, 1), pos, jnp.int32)
+        if paged is not None and getattr(pos, "ndim", 0) == 1:
+            positions = pos[:, None]          # per-slot positions
+        else:
+            positions = jnp.full((B, 1), pos, jnp.int32)
     else:
         positions = jnp.arange(S, dtype=jnp.int32)[None]
     h = add_positions(params["embed"], h, positions, cfg)
@@ -122,7 +132,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
             positions=positions, mode=mode, cache_g=cache_g, pos=pos,
             encoder_out=encoder_out, causal=causal, remat=remat,
             use_pallas=use_pallas, dist=dist, moe_ctx=moe_ctx,
-            constrain=constrain, shard_ctx=shard_ctx,
+            constrain=constrain, shard_ctx=shard_ctx, paged=paged,
         )
         aux = aux + a
         new_cache_groups.append(ncg)

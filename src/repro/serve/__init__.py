@@ -1,2 +1,6 @@
-from repro.serve.cache import pad_cache  # noqa: F401
-from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.cache import (alloc_decode_cache, pad_cache,  # noqa: F401
+                               walk_cache, write_prefill_into)
+from repro.serve.engine import PagedServeEngine, ServeEngine  # noqa: F401
+from repro.serve.paged_cache import (PageAllocator, PagedKVCache,  # noqa: F401
+                                     pages_for)
+from repro.serve.scheduler import FifoScheduler, Request  # noqa: F401

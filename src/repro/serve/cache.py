@@ -1,4 +1,21 @@
-"""KV-cache utilities: pad a prefill cache out to a decode allocation."""
+"""KV-cache utilities: the canonical cache leaf-walk, decode-cache
+preallocation, and the legacy ``pad_cache`` helper.
+
+Every cache tree in this repo has the structure
+``{"groups": [[{part: {leaf: array}}]]}`` with leaves stacked over a
+leading ``repeats`` (layers) axis.  Exactly one classification question
+comes up again and again — "is this leaf a growing sequence buffer or a
+fixed-size buffer?" — and :func:`walk_cache` answers it once, so the
+legacy padded-cache path, the preallocated decode cache, and the paged
+pool construction (``serve/paged_cache.py``) cannot drift apart:
+
+* *sequence* leaves (``k``/``v``/``ckv``/``kr`` of a non-windowed
+  mixer): axis 2 (after layers, batch) is the sequence and grows with
+  decode position;
+* *fixed* leaves: sliding-window ring buffers (the ``pos`` key marks
+  them), SSM conv/state buffers, and cross-attention caches — their
+  shapes never depend on the decode position.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,33 +27,107 @@ from repro.configs.base import ModelConfig
 _SEQ_LEAVES = ("k", "v", "ckv", "kr")
 
 
-def pad_cache(cache, cfg: ModelConfig, target_len: int):
-    """Pad every full-attention / MLA cache leaf to ``target_len`` along the
-    sequence axis.  Sliding-window ring buffers, SSM states and cross-attn
-    caches are fixed-size and pass through unchanged."""
+def is_fixed_part(part: str, sub) -> bool:
+    """True if every leaf of this cache part is fixed-size (ring buffer,
+    SSM state, cross-attn)."""
+    return part == "cross" or (part == "mixer" and "pos" in sub)
 
-    def walk_layer(spec_window, layer_cache):
-        out = {}
-        for part, sub in layer_cache.items():
-            if part == "cross" or (part == "mixer" and "pos" in sub):
-                out[part] = sub  # cross-attn / sliding ring: fixed size
-                continue
-            new = {}
-            for k, v in sub.items():
-                if k in _SEQ_LEAVES and part == "mixer":
-                    S = v.shape[2]
-                    if S < target_len:
-                        pad = [(0, 0)] * v.ndim
-                        pad[2] = (0, target_len - S)
-                        v = jnp.pad(v, pad)
-                new[k] = v
-            out[part] = new
-        return out
 
+def walk_cache(cache, cfg: ModelConfig, seq_fn, fixed_fn):
+    """Rebuild a cache tree, applying ``seq_fn(name, leaf, spec)`` to the
+    growing sequence leaves and ``fixed_fn(name, leaf, spec)`` to the
+    fixed-size ones.  Works on value trees and ShapeDtypeStruct trees
+    alike (the walk only reads the schedule, never leaf shapes)."""
     new_groups = []
     for gi, g in enumerate(cfg.schedule):
         layers = []
         for pi, spec in enumerate(g.pattern):
-            layers.append(walk_layer(spec.window, cache["groups"][gi][pi]))
+            layer_cache = cache["groups"][gi][pi]
+            out = {}
+            # sorted iteration: pytree dict order is canonical-sorted, so
+            # two walks over structurally-equal trees pair leaves 1:1
+            for part, sub in sorted(layer_cache.items()):
+                fixed = is_fixed_part(part, sub)
+                new = {}
+                for k, v in sorted(sub.items()):
+                    if not fixed and part == "mixer" and k in _SEQ_LEAVES:
+                        new[k] = seq_fn(k, v, spec)
+                    else:
+                        new[k] = fixed_fn(k, v, spec)
+                out[part] = new
+            layers.append(out)
         new_groups.append(layers)
     return {"groups": new_groups}
+
+
+def pad_cache(cache, cfg: ModelConfig, target_len: int):
+    """Pad every full-attention / MLA cache leaf to ``target_len`` along the
+    sequence axis.  Sliding-window ring buffers, SSM states and cross-attn
+    caches are fixed-size and pass through unchanged (by identity)."""
+
+    def pad_seq(name, v, spec):
+        S = v.shape[2]
+        if S >= target_len:
+            return v
+        pad = [(0, 0)] * v.ndim
+        pad[2] = (0, target_len - S)
+        return jnp.pad(v, pad)
+
+    return walk_cache(cache, cfg, pad_seq, lambda n, v, s: v)
+
+
+# ---------------------------------------------------------------------------
+# Preallocated decode cache (legacy contiguous path)
+# ---------------------------------------------------------------------------
+#
+# ``pad_cache`` reallocates the FULL cache with ``jnp.pad`` on every
+# ``generate`` call.  The preallocated path splits that into (a) a
+# one-time zero allocation per (batch, target_len) — reusable across
+# calls because stale tail positions are never attended before being
+# overwritten — and (b) a donated in-place write of the prefill prefix.
+
+
+def alloc_decode_cache(cache, cfg: ModelConfig, target_len: int):
+    """Zero buffers shaped like ``cache`` with sequence leaves grown to
+    ``target_len``.  Fixed leaves get no buffer (``None``): they pass
+    through from the prefill cache by identity."""
+
+    def alloc_seq(name, v, spec):
+        shape = list(v.shape)
+        shape[2] = target_len
+        return jnp.zeros(shape, v.dtype)
+
+    return walk_cache(cache, cfg, alloc_seq, lambda n, v, s: None)
+
+
+def _seq_leaves(tree, cfg: ModelConfig):
+    out = []
+    walk_cache(tree, cfg, lambda n, v, s: out.append(v), lambda n, v, s: None)
+    return tuple(out)
+
+
+@jax.jit
+def _write_prefix(bufs, leaves):
+    return tuple(
+        jax.lax.dynamic_update_slice_in_dim(b, x.astype(b.dtype), 0, axis=2)
+        for b, x in zip(bufs, leaves))
+
+
+# donated variant: buffers are reused in place step to step (ignored —
+# with a warning — on backends without donation support)
+_write_prefix_donated = jax.jit(
+    lambda bufs, leaves: _write_prefix.__wrapped__(bufs, leaves),
+    donate_argnums=(0,))
+
+
+def write_prefill_into(bufs, cache, cfg: ModelConfig, *, donate: bool = True):
+    """Write the prefill cache's sequence leaves into the preallocated
+    ``bufs`` (donated, so a recycled buffer is updated in place) and pass
+    every fixed leaf through from ``cache`` by identity."""
+    seq_new = _seq_leaves(cache, cfg)
+    seq_buf = _seq_leaves(bufs, cfg)
+    write = _write_prefix_donated if donate else _write_prefix
+    written = iter(write(seq_buf, seq_new))
+    return walk_cache(cache, cfg,
+                      lambda n, v, s: next(written),
+                      lambda n, v, s: v)

@@ -1,21 +1,50 @@
-"""Batched serving engine: prefill a batch of prompts, then decode tokens
-step by step against the (optionally sequence-sharded) KV cache."""
+"""Serving engines.
+
+:class:`PagedServeEngine` — continuous batching over a paged KV cache
+(docs/serving.md): requests are admitted from a FIFO queue whenever a
+batch slot, KV pages and token budget are free, prefilled one at a time
+through bucketed static shapes, scattered into the page pools, and then
+join the single fixed-shape decode step on the very next tick.
+Finished sequences free their pages immediately.  The decode step runs
+at one static shape forever — zero recompiles after warmup.
+
+:class:`ServeEngine` — the legacy static-batch path (prefill a batch,
+decode it to completion in lockstep).  Kept for encoder-decoder / VLM
+configs and as the baseline the serve benchmark compares against; its
+decode functions are cached per batch bucket and its decode cache is
+preallocated once and recycled across ``generate`` calls instead of
+being rebuilt with ``jnp.pad`` every time.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, Optional
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import RunConfig
+from repro.configs.base import MAMBA, RunConfig
 from repro.models.model import Model
-from repro.serve.cache import pad_cache
-from repro.train.train_step import make_decode_step, make_prefill_step
+from repro.serve.cache import alloc_decode_cache, write_prefill_into
+from repro.serve.paged_cache import PagedKVCache, commit_prefill, pages_for
+from repro.serve.scheduler import FifoScheduler, Request
+from repro.train.train_step import (make_decode_step, make_paged_decode_step,
+                                    make_paged_prefill_step,
+                                    make_prefill_step)
+
+
+def _bucket_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 @dataclass
 class ServeEngine:
+    """Legacy static-batch engine (see module docstring)."""
     model: Model
     run: RunConfig
     mesh: Optional[Any] = None
@@ -24,18 +53,21 @@ class ServeEngine:
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill_step(self.model, self.run,
                                                   self.mesh))
-        self._decode = None
-        self._decode_b = None
+        self._decode_fns: Dict[int, Any] = {}
+        self._bufs: Dict[Any, Any] = {}   # recycled decode caches
 
     def _decode_fn(self, batch_size: int):
-        if self._decode is None or self._decode_b != batch_size:
-            self._decode = jax.jit(
+        """Decode step cache keyed by (bucketed) batch size — repeat
+        calls at any previously seen bucket never retrace."""
+        fn = self._decode_fns.get(batch_size)
+        if fn is None:
+            fn = jax.jit(
                 make_decode_step(self.model, self.run, self.mesh,
                                  dist_cache=self.dist_cache,
                                  global_batch=batch_size),
                 donate_argnums=(1,))
-            self._decode_b = batch_size
-        return self._decode
+            self._decode_fns[batch_size] = fn
+        return fn
 
     def generate(self, params, batch: Dict[str, Any], *, max_new: int,
                  temperature: float = 0.0, seed: int = 0) -> jnp.ndarray:
@@ -43,9 +75,21 @@ class ServeEngine:
         Returns (B, max_new) generated token ids."""
         tokens = batch["tokens"]
         B, S0 = tokens.shape
+        Bb = _bucket_pow2(B)
+        if Bb != B:  # pad batch rows up to the bucket; sliced off below
+            batch = {k: jnp.concatenate(
+                [v, jnp.zeros((Bb - B, *v.shape[1:]), v.dtype)])
+                for k, v in batch.items()}
         logits, cache = self._prefill(params, batch)
-        cache = pad_cache(cache, self.model.cfg, S0 + max_new)
-        decode = self._decode_fn(B)
+        target = S0 + max_new
+        # preallocated decode cache, recycled across calls: stale tail
+        # positions are overwritten before they can be attended
+        bkey = (Bb, target)
+        bufs = self._bufs.pop(bkey, None)
+        if bufs is None:
+            bufs = alloc_decode_cache(cache, self.model.cfg, target)
+        cache = write_prefill_into(bufs, cache, self.model.cfg)
+        decode = self._decode_fn(Bb)
         key = jax.random.PRNGKey(seed)
         out = []
         tok = self._sample(logits[:, -1], temperature, key)
@@ -56,7 +100,8 @@ class ServeEngine:
             logits, cache = decode(params, cache, tok, jnp.int32(S0 + t))
             key, sub = jax.random.split(key)
             tok = self._sample(logits[:, -1], temperature, sub)
-        return jnp.concatenate(out, axis=1)
+        self._bufs[bkey] = cache
+        return jnp.concatenate(out, axis=1)[:B]
 
     @staticmethod
     def _sample(logits, temperature: float, key):
@@ -64,3 +109,169 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         g = jax.random.categorical(key, logits / temperature, axis=-1)
         return g[:, None].astype(jnp.int32)
+
+
+@dataclass
+class PagedServeEngine:
+    """Continuous batching over a paged KV cache.
+
+    ``submit`` enqueues requests; each ``step`` admits whatever fits
+    (prefill + commit + first token), runs ONE decode tick for all
+    active slots, and returns the requests that finished on this tick.
+    ``serve`` drives steps until everything submitted has completed.
+
+    Prompt buckets: attention-family models prefill right-padded to the
+    smallest power-of-two multiple of the page size (garbage keys past
+    the true length are never attended — see docs/serving.md); models
+    with SSM layers prefill at exact length, because a right-padded
+    scan would corrupt the recurrent state.
+    """
+    model: Model
+    run: RunConfig
+    page: int = 16
+    n_pages: int = 256
+    max_slots: int = 8
+    max_pages: Optional[int] = None        # per-seq page cap = max seq len
+    max_tokens: Optional[int] = None       # live-token budget (scheduler)
+    use_pallas_decode: bool = True
+    cache_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        assert not cfg.is_encoder_decoder and not cfg.n_image_tokens, \
+            "paged engine serves decoder-only LMs; use ServeEngine"
+        if self.max_pages is None:
+            # block-table width bounds per-sequence length AND the bytes
+            # one decode step touches — default to an even pool split
+            # rather than the whole pool
+            self.max_pages = max(1, (self.n_pages - 1) // self.max_slots)
+        if self.max_tokens is None:
+            self.max_tokens = (self.n_pages - 1) * self.page
+        self.kv = PagedKVCache.build(
+            cfg, page=self.page, n_pages=self.n_pages,
+            max_slots=self.max_slots, max_pages=self.max_pages,
+            dtype=self.cache_dtype)
+        self.sched = FifoScheduler(self.max_tokens)
+        self._exact_prefill = any(
+            s.kind == MAMBA for g in cfg.schedule for s in g.pattern)
+        self._prefill = jax.jit(make_paged_prefill_step(self.model, self.run))
+        self._commit = jax.jit(
+            lambda pools, cache, slot, pages: commit_prefill(
+                pools, cache, cfg, page=self.page, slot=slot, pages=pages),
+            donate_argnums=(0,))
+        self._decode = jax.jit(
+            make_paged_decode_step(self.model, self.run, self.page,
+                                   use_pallas=self.use_pallas_decode),
+            donate_argnums=(1,))
+        self._active: Dict[int, Request] = {}
+        self._next_tok = np.zeros((self.max_slots,), np.int32)
+        self._positions = np.zeros((self.max_slots,), np.int32)
+        self._next_rid = 0
+        self._step_count = 0
+        self._key = jax.random.PRNGKey(0)
+
+    # ---- introspection ----------------------------------------------
+    def decode_compiles(self) -> int:
+        """Number of decode-step compilations so far (must stop growing
+        after warmup — asserted by tests and the serve benchmark)."""
+        return self._decode._cache_size()
+
+    def utilization(self) -> float:
+        return self.kv.utilization()
+
+    # ---- submission --------------------------------------------------
+    def submit(self, tokens: Sequence[int], max_new: int,
+               arrival: float = 0.0) -> int:
+        total = len(tokens) + max_new
+        cap = self.max_pages * self.page
+        if total > cap:     # would wait in the queue forever
+            raise ValueError(
+                f"request needs {total} tokens > per-sequence capacity "
+                f"{cap} (max_pages={self.max_pages} x page={self.page})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(rid=rid, tokens=list(tokens),
+                                  max_new=max_new, arrival=arrival))
+        return rid
+
+    # ---- internals ---------------------------------------------------
+    def _bucket(self, L: int) -> int:
+        if self._exact_prefill:
+            return L
+        return _bucket_pow2(pages_for(L, self.page)) * self.page
+
+    def _sample_host(self, logits_row, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits_row))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(sub, logits_row / temperature))
+
+    def _admit(self, params, req: Request, temperature: float) -> None:
+        L = len(req.tokens)
+        slot = self.kv.admit(req.total_len)
+        Sb = self._bucket(L)
+        padded = np.zeros((1, Sb), np.int32)
+        padded[0, :L] = req.tokens
+        logits, cache = self._prefill(params, jnp.asarray(padded),
+                                      jnp.int32(L))
+        pages = self.kv.slot_pages[slot][:pages_for(L, self.page)]
+        self.kv.pools = self._commit(self.kv.pools, cache, jnp.int32(slot),
+                                     jnp.asarray(pages, jnp.int32))
+        tok = self._sample_host(logits[0, -1], temperature)
+        req.out.append(tok)
+        req.slot = slot
+        if req.max_new == 1:
+            self._finish(req)
+            self._done_now.append(req)
+            return
+        self._active[slot] = req
+        self._next_tok[slot] = tok
+        self._positions[slot] = L
+
+    def _finish(self, req: Request) -> None:
+        req.finish_step = self._step_count
+        self.kv.release(req.slot)
+        self.sched.release(req)
+        self._active.pop(req.slot, None)
+
+    # ---- the engine loop --------------------------------------------
+    def step(self, params, temperature: float = 0.0) -> List[Request]:
+        """Admit what fits, run one decode tick, return finished requests."""
+        self._step_count += 1
+        self._done_now: List[Request] = []
+        while True:
+            req = self.sched.try_admit(self.kv)
+            if req is None:
+                break
+            self._admit(params, req, temperature)
+        if not self._active:
+            return self._done_now
+        logits, self.kv.pools = self._decode(
+            params, self.kv.pools,
+            jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray(self._positions),
+            self.kv.tables())
+        logits = np.asarray(logits[:, 0])      # (max_slots, V)
+        done = self._done_now
+        for slot, req in list(self._active.items()):
+            tok = (int(np.argmax(logits[slot]))
+                   if temperature <= 0.0 else
+                   self._sample_host(jnp.asarray(logits[slot]), temperature))
+            req.out.append(tok)
+            self._positions[slot] += 1
+            self._next_tok[slot] = tok
+            if len(req.out) >= req.max_new:
+                self._finish(req)
+                done.append(req)
+        return done
+
+    def serve(self, params, temperature: float = 0.0,
+              max_steps: int = 100000) -> Dict[int, List[int]]:
+        """Drive steps until queue and batch drain; returns rid -> tokens."""
+        finished: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            if not self.sched.queue and not self._active:
+                break
+            for req in self.step(params, temperature):
+                finished[req.rid] = req.out
+        return finished

@@ -1,0 +1,225 @@
+"""Paged KV cache: fixed-size pages in a preallocated pool.
+
+The contiguous decode cache allocates ``max_slots x max_seq`` up front
+and pads every sequence to the worst case.  The paged layout instead
+keeps one POOL of ``n_pages`` fixed-size pages per cache leaf and a
+per-sequence BLOCK TABLE mapping logical page ``j`` of a sequence to a
+physical page id — admission allocates just the pages a request needs
+(``ceil((prompt + max_new) / page)``), completion frees them
+immediately, and utilization is real tokens over pool capacity instead
+of worst-case padding.
+
+Layout (built by :func:`build_pools` via the canonical
+``serve/cache.py`` leaf-walk, so every cache family routes correctly):
+
+* sequence leaves (full-attention ``k``/``v``, MLA ``ckv``/``kr``):
+  ``(layers, n_pages, page, *feature)`` — ONE block table serves every
+  layer, because the same physical page id indexes every layer's pool;
+* fixed-size leaves (sliding-window rings, SSM conv/state, cross-attn):
+  dense per-slot rows ``(layers, max_slots, *feature)`` — they pass
+  through the paging machinery unchanged, exactly as they pass through
+  ``pad_cache``.  Ring-buffer ``pos`` leaves become per-slot ``(layers,
+  max_slots, W)`` (continuous batching gives every slot its own clock).
+
+Physical page 0 is RESERVED as the trash page: it is never allocated,
+inactive batch slots' table rows point at it, and their (masked,
+ignored) decode writes land there — so the decode step needs no active
+mask and runs at one fixed batch shape forever (zero recompiles).
+
+The allocator is plain host-side python (a free list): page churn is a
+few integers per request, never a device sync.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import cache_shapes
+from repro.serve.cache import walk_cache
+
+
+def pages_for(total_len: int, page: int) -> int:
+    """Pages needed to hold positions ``0 .. total_len - 1``."""
+    return -(-int(total_len) // int(page))
+
+
+class PageAllocator:
+    """Free-list page allocator over ``n_pages`` physical pages.
+
+    Page 0 is reserved (the trash page) and never handed out."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "need at least one allocatable page"
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise MemoryError(f"KV pool exhausted: want {n} pages, "
+                              f"{len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        assert 0 not in out
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert 0 < p < self.n_pages and p not in self._free, p
+            self._free.append(p)
+
+    def utilization(self) -> float:
+        return self.n_used / max(1, self.capacity)
+
+
+def build_pools(cfg: ModelConfig, *, page: int, n_pages: int,
+                max_slots: int, dtype=jnp.float32):
+    """Zero-initialized pool tree for ``cfg`` (structure mirrors the
+    prefill cache; see module docstring for the leaf layouts)."""
+    # template shapes at a seq length >= every sliding window, so ring
+    # leaves come out at their full W
+    max_win = max([s.window for g in cfg.schedule for s in g.pattern
+                   if s.window is not None] or [0])
+    S0 = max(page, max_win)
+    sds, _ = cache_shapes(cfg, 1, S0, dtype)
+
+    def seq_pool(name, v, spec):
+        tail = v.shape[3:]                       # (layers, 1, S0, *tail)
+        return jnp.zeros((v.shape[0], n_pages, page, *tail), v.dtype)
+
+    def fixed_pool(name, v, spec):
+        if name == "pos":                        # ring clock: (layers, W)
+            return jnp.full((v.shape[0], max_slots, v.shape[1]), -1,
+                            jnp.int32)
+        return jnp.zeros((v.shape[0], max_slots, *v.shape[2:]), v.dtype)
+
+    return walk_cache(sds, cfg, seq_pool, fixed_pool)
+
+
+def _flat_leaves(tree, cfg: ModelConfig):
+    seq, fixed = [], []
+    walk_cache(tree, cfg, lambda n, v, s: seq.append(v),
+               lambda n, v, s: fixed.append(v))
+    return seq, fixed
+
+
+def commit_prefill(pools, prefill_cache, cfg: ModelConfig, *, page: int,
+                   slot, pages):
+    """Scatter one request's prefill cache into the pools.
+
+    Sequence leaves are cut into ``page``-sized chunks (right-padded to a
+    page multiple) and written at physical pages ``pages`` (a
+    ``(ceil(S/page),)`` int32 vector); fixed leaves are written to batch
+    row ``slot``.  Pure function of the pools — jit it per prompt bucket
+    with the pools donated.
+    """
+    pool_seq, pool_fixed = _flat_leaves(pools, cfg)
+    new_seq, new_fixed = _flat_leaves(prefill_cache, cfg)
+    n_chunks = pages.shape[0]
+    out_seq = []
+    for pool, leaf in zip(pool_seq, new_seq):
+        r, _, S = leaf.shape[:3]
+        tail = leaf.shape[3:]
+        x = leaf[:, 0]
+        Sp = n_chunks * page
+        if S < Sp:
+            padw = [(0, 0)] * x.ndim
+            padw[1] = (0, Sp - S)
+            x = jnp.pad(x, padw)
+        chunks = x[:, :Sp].reshape(r, n_chunks, page, *tail)
+        out_seq.append(pool.at[:, pages].set(chunks.astype(pool.dtype)))
+    out_fixed = []
+    for pool, leaf in zip(pool_fixed, new_fixed):
+        # ring "pos" leaves have no batch dim in the prefill cache
+        row = leaf if leaf.ndim == pool.ndim - 1 else leaf[:, 0]
+        out_fixed.append(pool.at[:, slot].set(row.astype(pool.dtype)))
+    it_s, it_f = iter(out_seq), iter(out_fixed)
+    return walk_cache(pools, cfg, lambda n, v, s: next(it_s),
+                      lambda n, v, s: next(it_f))
+
+
+@dataclass
+class PagedKVCache:
+    """Device pools + host-side page accounting for ``max_slots``
+    concurrently decoding sequences."""
+
+    cfg: ModelConfig
+    page: int
+    n_pages: int
+    max_slots: int
+    max_pages: int                       # block-table width (pages/seq cap)
+    pools: Dict = field(repr=False)
+    block_tables: np.ndarray = field(repr=False)   # (max_slots, max_pages)
+    allocator: PageAllocator = field(repr=False)
+    slot_pages: List[Optional[List[int]]] = field(repr=False)
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, *, page: int = 16, n_pages: int = 256,
+              max_slots: int = 8, max_pages: Optional[int] = None,
+              dtype=jnp.float32) -> "PagedKVCache":
+        max_pages = max_pages or (n_pages - 1)
+        return cls(
+            cfg=cfg, page=page, n_pages=n_pages, max_slots=max_slots,
+            max_pages=max_pages,
+            pools=build_pools(cfg, page=page, n_pages=n_pages,
+                              max_slots=max_slots, dtype=dtype),
+            block_tables=np.zeros((max_slots, max_pages), np.int32),
+            allocator=PageAllocator(n_pages),
+            slot_pages=[None] * max_slots,
+        )
+
+    # ---- admission / release ----------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, p in enumerate(self.slot_pages) if p is None]
+
+    def can_admit(self, total_len: int) -> bool:
+        n = pages_for(total_len, self.page)
+        return (n <= self.max_pages and self.allocator.can_alloc(n)
+                and any(p is None for p in self.slot_pages))
+
+    def admit(self, total_len: int) -> int:
+        """Allocate pages for ``total_len`` tokens; returns the slot."""
+        n = pages_for(total_len, self.page)
+        assert n <= self.max_pages, (n, self.max_pages)
+        slot = self.free_slots()[0]
+        pages = self.allocator.alloc(n)
+        self.slot_pages[slot] = pages
+        self.block_tables[slot] = 0
+        self.block_tables[slot, :n] = pages
+        return slot
+
+    def release(self, slot: int) -> None:
+        pages = self.slot_pages[slot]
+        assert pages is not None, f"slot {slot} not active"
+        self.allocator.free(pages)
+        self.slot_pages[slot] = None
+        self.block_tables[slot] = 0
+
+    # ---- views -------------------------------------------------------
+    def tables(self) -> jnp.ndarray:
+        return jnp.asarray(self.block_tables)
+
+    def utilization(self) -> float:
+        return self.allocator.utilization()
+
+    def pool_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(self.pools))

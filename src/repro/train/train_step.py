@@ -850,3 +850,46 @@ def make_decode_step(model: Model, run: RunConfig,
         return logits, new_cache
 
     return decode
+
+
+def make_paged_prefill_step(model: Model, run: RunConfig) -> Callable:
+    """Bucketed prefill for the paged engine: ``tokens`` is ONE prompt
+    right-padded to a bucket length, ``length`` its true length (dynamic,
+    so one compile per bucket shape serves every prompt in the bucket).
+    Returns (last-real-position logits, prefill cache)."""
+    from repro.models.transformer import head_apply
+
+    def prefill(params, tokens, length):
+        h, cache, _ = model.apply(
+            params, {"tokens": tokens}, mode="prefill",
+            use_pallas=run.use_pallas, act_dtype=_act_dtype(run),
+            moe_ctx=_moe_ctx(model, None, run, tokens.shape[0]),
+            return_hidden=True, paged={"length": length},
+        )
+        h_last = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+        return head_apply(params, h_last, model.cfg), cache
+
+    return prefill
+
+
+def make_paged_decode_step(model: Model, run: RunConfig, page: int,
+                           use_pallas: Optional[bool] = None) -> Callable:
+    """One continuous-batching decode tick at a FIXED batch shape
+    (``max_slots`` rows, inactive rows write the trash page): pools are
+    the paged KV pools, ``positions`` is (B,) per-slot, ``tables`` the
+    (B, max_pages) block tables.  Jit with the pools donated — every
+    input shape is constant for the engine's lifetime, so the step never
+    recompiles after warmup."""
+    up = run.use_pallas if use_pallas is None else use_pallas
+
+    def decode(params, pools, tokens, positions, tables):
+        paged = {"tables": tables, "page": page, "use_pallas": up}
+        batch = {"tokens": tokens, "pos": positions}
+        logits, new_pools, _ = model.apply(
+            params, batch, mode="decode", cache=pools,
+            act_dtype=_act_dtype(run), paged=paged,
+            moe_ctx=_moe_ctx(model, None, run, tokens.shape[0]),
+        )
+        return logits, new_pools
+
+    return decode

@@ -1,0 +1,116 @@
+"""Paged-attention decode kernel vs the dense gather reference, and the
+reference vs plain dense attention on a contiguous layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention_fwd
+
+P = 8          # page size
+NP = 32        # physical pages in the pool
+MAXP = 4       # block-table width
+
+
+def _setup(key, B, Hkv, rep, D, *, fragment=True):
+    """Random pools + FRAGMENTED block tables (non-contiguous,
+    out-of-order physical pages) + ragged per-sequence positions."""
+    kq, kk, kv, kt = jax.random.split(key, 4)
+    H = Hkv * rep
+    q = jax.random.normal(kq, (B, H, D))
+    k_pages = jax.random.normal(kk, (NP, P, Hkv, D))
+    v_pages = jax.random.normal(kv, (NP, P, Hkv, D))
+    if fragment:
+        # each sequence gets MAXP distinct pages drawn out of order from
+        # the whole pool (page 0 excluded: it is the reserved trash page)
+        perm = jax.random.permutation(kt, jnp.arange(1, NP))
+        tables = perm[:B * MAXP].reshape(B, MAXP).astype(jnp.int32)
+    else:
+        tables = (1 + jnp.arange(B * MAXP).reshape(B, MAXP)).astype(jnp.int32)
+    # ragged: positions spread across the table, incl. page boundaries
+    seq_lens = jnp.asarray(
+        [(7 * (b + 1) + b * b) % (MAXP * P) for b in range(B)], jnp.int32)
+    return q, k_pages, v_pages, tables, seq_lens
+
+
+@pytest.mark.parametrize("rep", [1, 2, 4])
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_kernel_matches_ref(rep, window, softcap):
+    q, kp, vp, tables, lens = _setup(jax.random.PRNGKey(0), B=4, Hkv=2,
+                                     rep=rep, D=16)
+    out = paged_attention_fwd(q, kp, vp, tables, lens, window=window,
+                              softcap=softcap, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lens, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_fragmented_equals_contiguous_tables():
+    """The same logical K/V through a fragmented table must equal the
+    contiguous-layout result — layout must be invisible."""
+    q, kp, vp, tables, lens = _setup(jax.random.PRNGKey(1), B=3, Hkv=2,
+                                     rep=2, D=16)
+    # re-pack each sequence's pages into a contiguous ascending layout
+    kp2 = jnp.zeros_like(kp)
+    vp2 = jnp.zeros_like(vp)
+    tables2 = (1 + jnp.arange(3 * MAXP).reshape(3, MAXP)).astype(jnp.int32)
+    for b in range(3):
+        for j in range(MAXP):
+            kp2 = kp2.at[tables2[b, j]].set(kp[tables[b, j]])
+            vp2 = vp2.at[tables2[b, j]].set(vp[tables[b, j]])
+    a = paged_attention_fwd(q, kp, vp, tables, lens, interpret=True)
+    b = paged_attention_fwd(q, kp2, vp2, tables2, lens, interpret=True)
+    np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+
+
+def test_ref_matches_dense_attention():
+    """paged_attention_ref on an identity layout == plain causal softmax
+    attention evaluated at the query position."""
+    key = jax.random.PRNGKey(2)
+    B, Hkv, rep, D = 2, 2, 2, 16
+    S = MAXP * P
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Hkv * rep, D))
+    k = jax.random.normal(kk, (B, S, Hkv, D))
+    v = jax.random.normal(kv, (B, S, Hkv, D))
+    # identity paging: sequence b's page j is physical page 1 + b*MAXP + j
+    kp = jnp.zeros((1 + B * MAXP, P, Hkv, D))
+    vp = jnp.zeros_like(kp)
+    kp = kp.at[1:].set(k.reshape(B * MAXP, P, Hkv, D))
+    vp = vp.at[1:].set(v.reshape(B * MAXP, P, Hkv, D))
+    tables = (1 + jnp.arange(B * MAXP).reshape(B, MAXP)).astype(jnp.int32)
+    lens = jnp.asarray([S - 1, S // 2], jnp.int32)
+    got = ref.paged_attention_ref(q, kp, vp, tables, lens)
+    # dense oracle
+    scale = D ** -0.5
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    for b in range(B):
+        pos = int(lens[b])
+        s = jnp.einsum("hd,khd->hk", q[b], kf[b, :pos + 1]) * scale
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hk,khd->hd", w, vf[b, :pos + 1])
+        np.testing.assert_allclose(got[b], o, atol=2e-5, rtol=2e-5)
+
+
+def test_positions_beyond_table_are_masked():
+    """Keys past the query position never contribute: mutating them
+    (e.g. stale data in a freed-and-reused page) must not change the
+    output."""
+    q, kp, vp, tables, lens = _setup(jax.random.PRNGKey(3), B=2, Hkv=2,
+                                     rep=1, D=16)
+    a = paged_attention_fwd(q, kp, vp, tables, lens, interpret=True)
+    # trash every position strictly beyond each sequence's query position
+    kp2, vp2 = kp, vp
+    for b in range(2):
+        pos = int(lens[b])
+        for j in range(MAXP):
+            for off in range(P):
+                if j * P + off > pos:
+                    pg = int(tables[b, j])
+                    kp2 = kp2.at[pg, off].set(999.0)
+                    vp2 = vp2.at[pg, off].set(-999.0)
+    b_ = paged_attention_fwd(q, kp2, vp2, tables, lens, interpret=True)
+    np.testing.assert_allclose(a, b_, atol=1e-6, rtol=1e-6)

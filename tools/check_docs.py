@@ -10,10 +10,11 @@ Two checks keep `docs/*.md` + README from rotting:
    the way the module docstrings do).
 
 2. Snippet check (`run_snippets`, CI only — needs the tier-1 jax env):
-   every fenced ```python block in docs/parallelism.md is executed with
-   `PYTHONPATH=src` on the CPU backend.  Snippets are specs, not
-   decoration: if the ParallelPlan contract or the fallback table
-   drifts, the doc fails CI.
+   every fenced ```python block in docs/parallelism.md and
+   docs/serving.md is executed with `PYTHONPATH=src` on the CPU
+   backend.  Snippets are specs, not decoration: if the ParallelPlan
+   contract, the paged-cache layout or the fallback tables drift, the
+   doc fails CI.
 
 Usage:
     python tools/check_docs.py            # links only (fast, no jax)
@@ -103,12 +104,13 @@ def main() -> int:
     for e in errors:
         print(f"FAIL {e}")
     if "--snippets" in sys.argv[1:]:
-        target = os.path.join(ROOT, "docs", "parallelism.md")
-        print(f"running fenced python snippets in "
-              f"{os.path.relpath(target, ROOT)}")
-        for i, err in run_snippets(target):
-            errors.append(f"docs/parallelism.md: snippet {i} failed")
-            print(f"FAIL snippet {i}:\n{err}")
+        for name in ("parallelism.md", "serving.md"):
+            target = os.path.join(ROOT, "docs", name)
+            print(f"running fenced python snippets in "
+                  f"{os.path.relpath(target, ROOT)}")
+            for i, err in run_snippets(target):
+                errors.append(f"docs/{name}: snippet {i} failed")
+                print(f"FAIL snippet {i}:\n{err}")
     if errors:
         print(f"{len(errors)} docs check failure(s)")
         return 1
