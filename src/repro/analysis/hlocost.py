@@ -393,6 +393,34 @@ def ep_dispatch_bytes(cfg, local_tokens: int, ep: int, *,
     return 2.0 * n_moe * all_to_all_bytes(payload, ep)
 
 
+def tp_activation_bytes(cfg, local_batch: int, seq_len: int, ms: int, *,
+                        dtype_bytes: int = 2, n_micro: int = 1) -> float:
+    """Analytic per-device activation-collective wire bytes of ONE train
+    step under ``tp_overlap``: each block enters its two parallel
+    regions (mixer, MLP) with one tiled ``all_gather`` of the
+    sequence-sharded (b, S/ms, d) activations and leaves with one
+    tiled ``psum_scatter`` of the partial (b, S, d) output — four ring
+    collectives per block, each moving ``(ms-1)/ms`` of the full
+    (b, S, d) payload per device.  ``local_batch`` is the rows ONE
+    microbatch runs per dp shard (``n_micro`` scales the total).
+
+    Joins the gradient wire models (``gradsync.ring_allreduce_bytes`` /
+    ``reduce_scatter_bytes``) so the roofline prices a TP step end to
+    end: grad sync bytes come from the bucket plan, activation bytes
+    from here.  Blocks without an MLP (pure-mixer patterns) cost two
+    collectives instead of four.
+    """
+    from repro.distributed.gradsync import all_gather_bytes
+
+    if ms <= 1:
+        return 0.0
+    payload = float(local_batch) * seq_len * cfg.d_model * dtype_bytes
+    n_coll = sum(g.repeats * (4 if s.has_mlp else 2)
+                 for g in cfg.schedule for s in g.pattern)
+    # ag and rs move the same (n-1)/n * payload per device
+    return n_micro * n_coll * all_gather_bytes(payload, ms)
+
+
 def paged_decode_read_bytes(cfg, pos: int, *, page: int, max_seq: int,
                             dtype_bytes: int = 2) -> Dict[str, float]:
     """Analytic KV bytes ONE decode step streams for ONE sequence at

@@ -248,7 +248,8 @@ def _remap(bucket: GradBucket, orig: Sequence[int]) -> GradBucket:
 
 
 def partition_fsdp_buckets(leaves: Sequence[Any], n_shards: int, *,
-                           bucket_mb: float = DEFAULT_BUCKET_MB
+                           bucket_mb: float = DEFAULT_BUCKET_MB,
+                           pinned: Sequence[int] = ()
                            ) -> FsdpBucketPlan:
     """Split grad leaves into scatter vs psum buckets for fsdp.
 
@@ -257,8 +258,16 @@ def partition_fsdp_buckets(leaves: Sequence[Any], n_shards: int, *,
     shardable so its flat buffer splits into ``n_shards`` equal chunks
     with no padding (each member leaf's size divides by ``n_shards``).
     Both groups keep the reverse-layer walk of :func:`partition_buckets`.
+
+    ``pinned`` flat indices are forced into the psum category regardless
+    of shardability — the fsdp_tp composition pins the tensor-parallel
+    leaves there (already sharded over ``model``, their grads need only
+    the plain psum over data, and :func:`gather_fsdp_params` must pass
+    them through untouched).
     """
-    dims = tuple(shard_dim(l, n_shards) for l in leaves)
+    pin = set(pinned)
+    dims = tuple(None if i in pin else shard_dim(l, n_shards)
+                 for i, l in enumerate(leaves))
     sc = [i for i, d in enumerate(dims) if d is not None]
     rp = [i for i, d in enumerate(dims) if d is None]
     scatter = tuple(
@@ -290,7 +299,8 @@ def _blocks_to_leaf(blocks, loc_shape: Tuple[int, ...], dim: int, n: int):
 
 
 def gather_fsdp_params(local_params, axis_names: AxisNames,
-                       plan: FsdpBucketPlan):
+                       plan: FsdpBucketPlan, *,
+                       free_after_use: bool = False):
     """Rebuild full parameters from per-device shards with one
     ``all_gather`` per scatter bucket.
 
@@ -299,21 +309,39 @@ def gather_fsdp_params(local_params, axis_names: AxisNames,
     gather depends only on its own bucket's shards — so the scheduler can
     prefetch layer N's bucket while layer N-1's matmuls run.  Replicated
     leaves pass through untouched.
+
+    ``free_after_use=True`` wraps each bucket's gather in
+    ``jax.checkpoint``: the gathered full-param buffer is dropped from
+    the residual set as soon as its consumers run and re-gathered during
+    backward, so peak memory holds roughly one bucket's full parameters
+    instead of the whole gathered tree — at the cost of issuing the
+    gather wire twice per step.  The ``fsdp_overlap`` bench measures
+    where that trade flips.
     """
     leaves, treedef = jax.tree_util.tree_flatten(local_params)
     out = list(leaves)
     n = plan.n_shards
-    for b in reversed(plan.scatter):
-        parts = [leaves[i] for i in b.indices]
+
+    def gather_bucket(b, parts):
         flat = jnp.concatenate([p.reshape(-1) for p in parts])
         with jax.named_scope(f"fsdp_gather_{b.mb:.1f}mb"):
             g = jax.lax.all_gather(flat, axis_names)  # (n, local_len)
+        full = []
         off = 0
         for i, p in zip(b.indices, parts):
             loc = int(np.prod(p.shape))
-            out[i] = _blocks_to_leaf(g[:, off:off + loc], p.shape,
-                                     plan.shard_dims[i], n)
+            full.append(_blocks_to_leaf(g[:, off:off + loc], p.shape,
+                                        plan.shard_dims[i], n))
             off += loc
+        return full
+
+    for b in reversed(plan.scatter):
+        parts = [leaves[i] for i in b.indices]
+        fn = (jax.checkpoint(lambda ps, _b=b: gather_bucket(_b, ps))
+              if free_after_use else
+              (lambda ps, _b=b: gather_bucket(_b, ps)))
+        for i, full in zip(b.indices, fn(parts)):
+            out[i] = full
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

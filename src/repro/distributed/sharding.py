@@ -50,8 +50,9 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "ParallelPlan",
     "GRAD_SYNC_BUCKETED", "GRAD_SYNC_SCATTER", "GRAD_SYNC_PIPE",
-    "GRAD_SYNC_EP", "GRAD_SYNC_XLA", "GRAD_SYNC_NONE",
-    "RULES", "spec_for", "tree_shardings", "batch_axes", "batch_spec",
+    "GRAD_SYNC_EP", "GRAD_SYNC_TP", "GRAD_SYNC_XLA", "GRAD_SYNC_NONE",
+    "RULES", "TP_LEAF_AXES", "tp_compatible",
+    "spec_for", "tree_shardings", "batch_axes", "batch_spec",
     "activation_sharding", "shard_map", "optimization_barrier",
     "local_batch_size", "process_batch_slice",
     "flash_attn_ctx", "flash_shard_shapes", "flash_analytic_cost",
@@ -496,16 +497,56 @@ def cache_batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
 #                      replicated leaves over (expert,) + data — the
 #                      same split as pipe_overlap's stage/replicated
 #                      buckets
+#   tp_overlap       — tp/fsdp_tp on a mesh with a >1 'model' axis:
+#                      Megatron column/row-parallel attention + FFN with
+#                      the activation collectives explicitly scheduled
+#                      inside the shard_map'd step — sequence-parallel
+#                      layout between blocks (activations sharded over
+#                      'model' on the seq dim), one all_gather entering
+#                      each block's parallel region and one
+#                      psum_scatter leaving it.  tp-sharded leaf grads
+#                      psum over the data axes only, dense leaves over
+#                      ('model',) + data — the same stage/replicated
+#                      split as pipe_overlap/ep_overlap.  Under fsdp_tp
+#                      the dense leaves additionally run the ZeRO-3
+#                      scatter layout over 'data' (gather forward,
+#                      psum_scatter backward), composed via
+#                      :meth:`ParallelPlan.tp_scatter_plan`.
 #   xla_fused        — the partitioner inserts collectives from the sharded
-#                      param/grad specs (tp, and every fallback:
-#                      indivisible microbatch, tp-sharded leaves)
+#                      param/grad specs (the tp fallbacks: indivisible
+#                      heads/ff/seq, MoE, overlap off)
 #   none             — single data-parallel shard: nothing to synchronize
 GRAD_SYNC_BUCKETED = "bucketed_overlap"
 GRAD_SYNC_SCATTER = "scatter_overlap"
 GRAD_SYNC_PIPE = "pipe_overlap"
 GRAD_SYNC_EP = "ep_overlap"
+GRAD_SYNC_TP = "tp_overlap"
 GRAD_SYNC_XLA = "xla_fused"
 GRAD_SYNC_NONE = "none"
+
+# logical axes the tp_overlap path shards over 'model' (column/row
+# parallel attention + FFN).  Deliberately narrower than the _TP rule
+# table: vocab/head_dim/experts stay dense — the explicit schedule only
+# partitions the dims whose collectives it places by hand.
+TP_LEAF_AXES = ("heads", "kv_heads", "ff")
+
+
+def tp_compatible(model_cfg) -> Tuple[bool, str]:
+    """(ok, reason) — whether the explicitly-scheduled tp step supports
+    this model's structure.  The tp_ctx gather/scatter schedule assumes
+    every sublayer is attention or a dense MLP (partial-sum outputs the
+    psum_scatter reduces); SSM and MLA mixers and the encoder-decoder
+    assembly need their own partition story and fall back to the
+    partitioner-scheduled tp specs instead."""
+    from repro.configs.base import ATTN, SHARED_ATTN
+
+    if getattr(model_cfg, "is_encoder_decoder", False):
+        return False, "encoder-decoder"
+    for g in model_cfg.schedule:
+        for s in g.pattern:
+            if s.kind not in (ATTN, SHARED_ATTN):
+                return False, f"{s.kind} mixer"
+    return True, ""
 
 
 @dataclass(frozen=True)
@@ -557,6 +598,24 @@ class ParallelPlan:
                                    # memory drops by ~the full param
                                    # tree at the cost of 2x gather wire;
                                    # fsdp_overlap reports the delta
+    free_after_use: bool = False   # scatter_overlap: per-bucket regather
+                                   # — each bucket's forward all_gather
+                                   # is wrapped in jax.checkpoint so the
+                                   # gathered buffer is freed after its
+                                   # layers consume it and re-gathered in
+                                   # backward (peak memory holds one
+                                   # bucket's full params instead of the
+                                   # whole tree, at 2x gather wire);
+                                   # fsdp_overlap measures the trade
+    n_heads: int = 0               # tp_overlap engagement: attention
+                                   # q heads (0 = not known, gate passes)
+    n_kv_heads: int = 0            # ... kv heads (GQA groups must split)
+    d_ff: int = 0                  # ... FFN hidden width
+    seq_len: int = 0               # ... sequence length (the sequence-
+                                   # parallel layout shards it)
+    tp_ok: bool = True             # model structure admits the explicit
+                                   # tp schedule (sharding.tp_compatible:
+                                   # attention + dense-MLP blocks only)
     pp_schedule: str = "1f1b"      # gpipe | 1f1b (pp modes only)
     n_layers: int = 0              # depth of the block stack (pp modes:
                                    # must divide by the pipe axis)
@@ -570,7 +629,9 @@ class ParallelPlan:
              grad_bucket_mb: float = 25.0, overlap: bool = True,
              microbatch: int = 1, has_moe: bool = False,
              n_experts: int = 0, ep_overlap_dispatch: bool = True,
-             donate_gather: bool = True,
+             donate_gather: bool = True, free_after_use: bool = False,
+             n_heads: int = 0, n_kv_heads: int = 0, d_ff: int = 0,
+             seq_len: int = 0, tp_ok: bool = True,
              pp_schedule: str = "1f1b", n_layers: int = 0,
              stageable: bool = True) -> "ParallelPlan":
         """Build a plan for one (mesh, mode, global_batch) triple.
@@ -613,6 +674,9 @@ class ParallelPlan:
                    n_experts=n_experts,
                    ep_overlap_dispatch=ep_overlap_dispatch,
                    donate_gather=donate_gather,
+                   free_after_use=free_after_use,
+                   n_heads=n_heads, n_kv_heads=n_kv_heads, d_ff=d_ff,
+                   seq_len=seq_len, tp_ok=tp_ok,
                    pp_schedule=pp_schedule, n_layers=n_layers,
                    stageable=stageable, _dp_axes=dp, _pipe_ok=pipe_ok)
 
@@ -621,6 +685,7 @@ class ParallelPlan:
                 grad_bucket_mb: float = 25.0,
                 overlap: bool = True,
                 donate_gather: bool = True,
+                free_after_use: bool = False,
                 ep_overlap_dispatch: bool = True) -> "ParallelPlan":
         """Plan derived from a ``RunConfig`` (mode, global batch,
         microbatch count, MoE-ness, layer depth and stage compatibility
@@ -634,10 +699,17 @@ class ParallelPlan:
                         grad_bucket_mb=grad_bucket_mb,
                         overlap=overlap,
                         donate_gather=donate_gather,
+                        free_after_use=free_after_use,
                         ep_overlap_dispatch=ep_overlap_dispatch,
                         microbatch=run.microbatch or 1,
                         has_moe=moe is not None,
                         n_experts=moe.n_experts if moe is not None else 0,
+                        n_heads=run.model.n_heads,
+                        n_kv_heads=run.model.n_kv_heads
+                        or run.model.n_heads,
+                        d_ff=run.model.d_ff,
+                        seq_len=run.shape.seq_len,
+                        tp_ok=tp_compatible(run.model)[0],
                         pp_schedule=getattr(run, "pp_schedule", "1f1b"),
                         n_layers=run.model.n_layers,
                         stageable=stage_compatible(run.model)[0])
@@ -767,17 +839,46 @@ class ParallelPlan:
         return self.global_batch // self.dp_size if self.dp_size else \
             self.global_batch
 
+    # -- tensor-parallel axis --------------------------------------------
     @property
-    def tp_sharded(self) -> bool:
-        """True when the tp rules actually shard leaves — i.e. the mesh
-        carries a ``model`` axis of size > 1 under a tp-carrying mode.
-        ``scatter_overlap`` cannot bucket tp-sharded leaves (their shards
-        live on the model axis, not the dp axes), so fsdp_tp falls back
-        to ``xla_fused`` in that case; on a model-axis-1 mesh the tp
-        specs are vacuous and the scatter path engages."""
-        return self.mode in ("tp", "fsdp_tp") and self.mesh is not None \
-            and "model" in getattr(self.mesh, "axis_names", ()) \
-            and self.mesh.shape["model"] > 1
+    def tp_size(self) -> int:
+        """Width of the mesh's ``model`` axis (1 when absent)."""
+        if self.mesh is not None \
+                and "model" in getattr(self.mesh, "axis_names", ()):
+            return self.mesh.shape["model"]
+        return 1
+
+    @property
+    def tp_engaged(self) -> bool:
+        """True when this plan runs the explicitly-scheduled tensor-
+        parallel step (``tp_overlap``): a tp-carrying mode on a mesh
+        with a >1 ``model`` axis, overlap on, no MoE (the ep dispatch
+        owns the model axis there), a microbatch count that divides the
+        per-shard batch, and head/ff/sequence dims the model axis
+        divides (``n_heads``/``n_kv_heads``/``d_ff``/``seq_len``; a 0
+        means "not known", which passes — :meth:`for_run` always fills
+        them).  When False the tp modes fall back to the partitioner-
+        scheduled ``xla_fused`` step (tp specs applied, collectives
+        implicit) or, for fsdp_tp on a model-axis-1 mesh, to
+        ``scatter_overlap`` with vacuous tp specs."""
+        if self.mesh is None or self.mode not in ("tp", "fsdp_tp"):
+            return False
+        ms = self.tp_size
+        if ms <= 1 or not self.overlap or self.has_moe \
+                or not self.tp_ok:
+            return False
+        if self.local_batch % self.microbatch != 0 \
+                or self.local_batch < self.microbatch:
+            return False
+        for dim in (self.n_heads, self.n_kv_heads, self.d_ff,
+                    self.seq_len):
+            if dim and dim % ms != 0:
+                return False
+        return True
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        return "model" if self.tp_engaged else None
 
     @property
     def grad_sync(self) -> str:
@@ -796,17 +897,24 @@ class ParallelPlan:
         transpose re-psums the cotangent; see
         ``tests/test_moe_router_stats.py``).  On a mesh with an
         ``expert`` axis an MoE ddp plan upgrades to ``ep_overlap``
-        (:attr:`ep_engaged`).  fsdp_tp falls back when
-        :attr:`tp_sharded` (see there).  The pp modes return
-        ``pipe_overlap`` when :attr:`pipe_engaged`; otherwise ``pipe``
-        has been demoted to a data axis (see :meth:`make`) and they
-        dispatch exactly like ddp.  The full mode x condition table
-        lives in ``docs/parallelism.md`` and is asserted in
+        (:attr:`ep_engaged`).  The tp modes return ``tp_overlap`` when
+        :attr:`tp_engaged` — note this is checked BEFORE the
+        ``dp_size <= 1`` gate: a pure-tp mesh (data=1, model=ms) has no
+        data parallelism yet still needs the explicitly-scheduled tp
+        step.  The pp modes return ``pipe_overlap`` when
+        :attr:`pipe_engaged`; otherwise ``pipe`` has been demoted to a
+        data axis (see :meth:`make`) and they dispatch exactly like
+        ddp.  The full mode x condition table lives in
+        ``docs/parallelism.md`` and is asserted in
         ``tests/test_gradsync.py``; :attr:`fallback_reason` names the
         gate that declined a better strategy."""
         if self._pipe_ok:
             return GRAD_SYNC_PIPE
-        if self.mesh is None or self.dp_size <= 1:
+        if self.mesh is None:
+            return GRAD_SYNC_NONE
+        if self.tp_engaged:
+            return GRAD_SYNC_TP
+        if self.dp_size <= 1:
             return GRAD_SYNC_NONE
         divisible = self.local_batch % self.microbatch == 0 \
             and self.local_batch >= self.microbatch
@@ -815,7 +923,8 @@ class ParallelPlan:
                 return GRAD_SYNC_EP
             if self.mode in ("ddp", "pp", "pp_dp"):
                 return GRAD_SYNC_BUCKETED
-            if self.mode in ("fsdp", "fsdp_tp") and not self.tp_sharded:
+            if self.mode == "fsdp" or (self.mode == "fsdp_tp"
+                                       and self.tp_size <= 1):
                 return GRAD_SYNC_SCATTER
         return GRAD_SYNC_XLA
 
@@ -836,11 +945,24 @@ class ParallelPlan:
         if gs == GRAD_SYNC_XLA:
             if not self.overlap:
                 return "overlap disabled"
+            if self.mode in ("tp", "fsdp_tp") and self.tp_size > 1:
+                ms = self.tp_size
+                if self.has_moe:
+                    return "moe (tp has no ep composition)"
+                if not self.tp_ok:
+                    return "tp-incompatible model structure"
+                if self.n_heads and self.n_heads % ms != 0:
+                    return "tp-indivisible heads"
+                if self.n_kv_heads and self.n_kv_heads % ms != 0:
+                    return "tp-indivisible kv heads"
+                if self.d_ff and self.d_ff % ms != 0:
+                    return "tp-indivisible d_ff"
+                if self.seq_len and self.seq_len % ms != 0:
+                    return "tp-indivisible seq_len"
+                return "indivisible microbatch"
             if not divisible:
                 return "indivisible microbatch"
-            if self.tp_sharded:
-                return "tp_sharded"
-            return "tp-only mode"
+            return "tp mode without a model axis"
         if self.mode in ("pp", "pp_dp") and not self._pipe_ok:
             why = "moe" if self.has_moe else \
                 "unstageable model" if not self.stageable else \
@@ -1025,6 +1147,147 @@ class ParallelPlan:
         return pipeline.partition_pipe_buckets(
             leaves, expert_idx, bucket_mb=self.grad_bucket_mb)
 
+    # -- tensor-parallel layout ------------------------------------------
+    def _tp_shard_dims(self, axes_tree, abstract_params):
+        """Tree (same structure as the params) of the per-leaf position
+        of the tp-sharded logical dim (first of :data:`TP_LEAF_AXES`
+        the model axis divides), or -1 for dense leaves.  Driven by the
+        logical-axes tree like :meth:`_ep_expert_dims` — scan-stacked
+        block leaves carry a leading ``layers`` dim, which the
+        enumerate skips naturally."""
+        ms = self.tp_size
+
+        def one(axes, leaf):
+            if axes is None:
+                return -1
+            for d, name in enumerate(axes):
+                if name in TP_LEAF_AXES and leaf.shape[d] % ms == 0:
+                    return d
+            return -1
+
+        return jax.tree_util.tree_map(
+            one, axes_tree, abstract_params,
+            is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+    def tp_param_specs(self, axes_tree, abstract_params):
+        """Per-leaf ``PartitionSpec`` tree of the ``tp_overlap`` state
+        layout: leaves with a heads/kv_heads/ff logical dim sharded over
+        ``model`` on that dim; under fsdp_tp the dense leaves are
+        additionally ZeRO-3-sharded over the dp axes on their
+        :func:`~repro.distributed.gradsync.shard_dim` (moments follow
+        params); None for non-tp plans.  Shared between the tp step's
+        shard_map specs and the runner's state placement — same
+        single-builder rule as :meth:`scatter_param_specs`."""
+        if not self.tp_engaged:
+            return None
+        from repro.distributed import gradsync
+
+        dims = self._tp_shard_dims(axes_tree, abstract_params)
+        fsdp = self.mode == "fsdp_tp" and self.dp_size > 1
+        axis = self._dp_axes if len(self._dp_axes) > 1 else \
+            (self._dp_axes[0] if self._dp_axes else None)
+
+        def one(d, leaf):
+            if d >= 0:
+                return P(*([None] * d), "model")
+            if fsdp and axis is not None:
+                sd = gradsync.shard_dim(leaf, self.dp_size)
+                if sd is not None:
+                    return P(*([None] * sd), axis)
+            return P()
+
+        return jax.tree_util.tree_map(one, dims, abstract_params)
+
+    def _tp_local_leaves(self, axes_tree, abstract_params):
+        """(leaves, tp_indices): flat grad-width leaves at their
+        model-LOCAL shapes plus the flat indices of the tp-sharded
+        ones."""
+        import jax.numpy as jnp
+
+        ms = self.tp_size
+        dims = jax.tree_util.tree_leaves(
+            self._tp_shard_dims(axes_tree, abstract_params))
+        leaves, tp_idx = [], []
+        for i, (l, d) in enumerate(zip(
+                jax.tree_util.tree_leaves(abstract_params), dims)):
+            shape = tuple(l.shape)
+            if d >= 0:
+                shape = shape[:d] + (shape[d] // ms,) + shape[d + 1:]
+                tp_idx.append(i)
+            dt = jnp.float32 if self.microbatch > 1 else l.dtype
+            leaves.append(jax.ShapeDtypeStruct(shape, dt))
+        return leaves, tp_idx
+
+    def tp_sync_plan(self, axes_tree, abstract_params):
+        """The grad-sync bucket layout of a ``tp_overlap`` run, reusing
+        :class:`~repro.distributed.pipeline.PipeSyncPlan` with
+        ``model`` in the role of ``pipe``: tp-sharded leaves (at their
+        LOCAL head/ff-sliced shapes) bucket separately and psum over
+        the data axes only, dense leaves psum over ``('model',) +
+        data``.  Sized at grad width like :meth:`grad_buckets`; None
+        for non-tp plans."""
+        if not self.tp_engaged:
+            return None
+        from repro.distributed import pipeline
+
+        leaves, tp_idx = self._tp_local_leaves(axes_tree,
+                                               abstract_params)
+        return pipeline.partition_pipe_buckets(
+            leaves, tp_idx, bucket_mb=self.grad_bucket_mb)
+
+    def tp_scatter_plan(self, axes_tree, abstract_params):
+        """The fsdp_tp composition's ZeRO-3 bucket layout: a
+        :class:`~repro.distributed.gradsync.FsdpBucketPlan` over the dp
+        axes with the tp-sharded leaves PINNED into the psum category —
+        their grads are already correct after a plain psum over data
+        (each model rank owns a distinct head/ff slice), and
+        ``gather_fsdp_params`` passes psum-category leaves through
+        untouched, so the model-axis sharding survives the scatter
+        machinery.  Dense grads must be psum'd over ``('model',)``
+        FIRST (the ``tp_sync_plan`` replicated buckets do that); then
+        this plan's scatter/psum schedule over data applies.  None
+        unless an fsdp_tp plan with real data parallelism engaged
+        tp."""
+        if not self.tp_engaged or self.mode != "fsdp_tp" \
+                or self.dp_size <= 1:
+            return None
+        from repro.distributed import gradsync
+
+        leaves, tp_idx = self._tp_local_leaves(axes_tree,
+                                               abstract_params)
+        return gradsync.partition_fsdp_buckets(
+            leaves, self.dp_size, bucket_mb=self.grad_bucket_mb,
+            pinned=tp_idx)
+
+    # -- the merged, plan-driven spec builder ----------------------------
+    def param_specs(self, axes_tree, abstract_params):
+        """THE state-layout builder: one dispatch over the engaged
+        strategy replaces the hand-paired ``tree_shardings`` /
+        ``scatter_param_specs`` / ``stage_param_specs`` /
+        ``ep_param_specs`` call sites — every caller (step shard_map
+        specs, runner state placement, checkpoint restore) asks the
+        plan once and gets the same per-leaf ``PartitionSpec`` tree:
+
+        * ``pipe_overlap``  — block stack over ``pipe`` (leading
+          layers dim), rest replicated;
+        * ``ep_overlap``    — expert leaves over ``expert`` on their
+          ``experts`` dim, rest replicated;
+        * ``tp_overlap``    — heads/kv_heads/ff leaves over ``model``;
+          under fsdp_tp dense leaves ZeRO-3 over the dp axes;
+        * ``scatter_overlap`` — every dp-divisible leaf over the dp
+          axes on its first divisible dim;
+        * anything else     — fully replicated.
+        """
+        if self._pipe_ok:
+            return self.pipe_param_specs(abstract_params)
+        if self.ep_engaged:
+            return self.ep_param_specs(axes_tree, abstract_params)
+        if self.tp_engaged:
+            return self.tp_param_specs(axes_tree, abstract_params)
+        if self.grad_sync == GRAD_SYNC_SCATTER:
+            return self.scatter_param_specs(abstract_params)
+        return jax.tree_util.tree_map(lambda l: P(), abstract_params)
+
     def pipe_schedule_obj(self):
         """The static :class:`~repro.distributed.pipeline.PipeSchedule`
         tick table of this plan, or None when not pipelining."""
@@ -1055,5 +1318,7 @@ class ParallelPlan:
         if self.has_moe or self.ep_size > 1:
             out.update(ep_engaged=self.ep_engaged, ep_size=self.ep_size,
                        n_experts=self.n_experts)
+        if self.mode in ("tp", "fsdp_tp"):
+            out.update(tp_engaged=self.tp_engaged, tp_size=self.tp_size)
         out["fallback_reason"] = self.fallback_reason
         return out

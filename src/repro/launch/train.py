@@ -28,6 +28,11 @@ bucket size; docs/parallelism.md has the full strategy table):
 all-reduce; ``--sharding fsdp`` gets scatter_overlap — params and
 optimizer state sharded over the dp axes, per-bucket all_gather
 prefetch in forward, per-bucket psum_scatter in backward.
+``--tensor-parallel N`` carves an N-wide 'model' axis and runs the
+explicitly-scheduled tensor-parallel step (``tp_overlap``): attention
+heads and FFN columns shard over it, activations stay sequence-sharded
+between blocks, and ZeRO-3 over the remaining data axis composes in
+under ``--sharding fsdp_tp`` (the implied default).
 
 Resuming from a pinned ``--ckpt-step N`` protects checkpoint N from
 ``--keep-last-k`` GC for the rest of the run (docs/resume.md).
@@ -95,6 +100,13 @@ def main():
                          "dispatch with overlapped all_to_all "
                          "(ep_overlap; requires --sharding ddp and "
                          "n_experts divisible by N)")
+    ap.add_argument("--tensor-parallel", type=int, default=0,
+                    help="carve an N-wide 'model' axis for tensor "
+                         "parallelism: attention heads and FFN columns "
+                         "shard over it with explicitly-scheduled "
+                         "sequence-parallel collectives (tp_overlap; "
+                         "implies --sharding fsdp_tp unless a tp mode "
+                         "was given; heads/d_ff/seq must divide by N)")
     ap.add_argument("--pp-schedule", default="1f1b",
                     choices=["gpipe", "1f1b"],
                     help="pipeline microbatch schedule: gpipe holds M "
@@ -182,6 +194,12 @@ def main():
         # without a pipe axis the plan would silently demote to plain
         # ddp — make the mismatch loud instead
         ap.error(f"--sharding {sharding} needs --pipeline-stages >= 2")
+    if args.tensor_parallel > 1 and sharding not in ("tp", "fsdp_tp"):
+        sharding = "fsdp_tp"
+    if sharding in ("tp", "fsdp_tp") and args.tensor_parallel < 2:
+        # same loudness rule: a tp mode on a model-axis-1 mesh would
+        # silently fall back (fsdp_tp -> scatter_overlap, tp -> fused)
+        ap.error(f"--sharding {sharding} needs --tensor-parallel >= 2")
     run = default_run_config(cfg, ShapeConfig("cli", args.seq, gbatch,
                                               "train"),
                              sharding=sharding,
@@ -196,11 +214,23 @@ def main():
     # gradient-sync strategy (bucketed overlapped psum for multi-shard
     # ddp; the staged pipeline when --pipeline-stages carves a pipe axis)
     n_dev = jax.device_count()
-    if args.pipeline_stages > 1 and args.expert_parallel > 1:
-        ap.error("--pipeline-stages and --expert-parallel are mutually "
-                 "exclusive (the pipe and expert axes both carve the "
-                 "data axis; composing them is tracked in ROADMAP.md)")
-    if args.pipeline_stages > 1:
+    carvers = [n for n, v in (("--pipeline-stages", args.pipeline_stages),
+                              ("--expert-parallel", args.expert_parallel),
+                              ("--tensor-parallel", args.tensor_parallel))
+               if v > 1]
+    if len(carvers) > 1:
+        ap.error(f"{' and '.join(carvers)} are mutually exclusive (each "
+                 "carves its axis out of the data axis; composing them "
+                 "is tracked in ROADMAP.md)")
+    if args.tensor_parallel > 1:
+        tp = args.tensor_parallel
+        if n_dev % tp != 0:
+            ap.error(f"--tensor-parallel {tp} must divide the device "
+                     f"count {n_dev}")
+        dp = n_dev // tp
+        mesh = make_host_mesh(data=dp if gbatch % max(1, dp) == 0 else 1,
+                              model=tp)
+    elif args.pipeline_stages > 1:
         stages = args.pipeline_stages
         if n_dev % stages != 0:
             ap.error(f"--pipeline-stages {stages} must divide the "
@@ -243,6 +273,11 @@ def main():
               f"expert_buckets={gs['n_expert_buckets']} "
               f"dispatch_wire="
               f"{gs['dispatch_wire_bytes_per_device']/1e6:.1f}MB/dev")
+    if gs.get("tp_engaged"):
+        print(f"[plan] tensor-parallel: tp={gs['tp_size']} "
+              f"tp_buckets={gs['n_tp_buckets']} "
+              f"act_wire={gs['tp_wire_bytes_per_device']/1e6:.1f}MB/dev "
+              f"gather={gs['param_gather_bytes']/1e6:.1f}MB")
 
     if args.workers == 0:
         # R3 end-to-end: measure the real compiled step time on a scratch

@@ -91,8 +91,22 @@ def apply_block(bp, shared, h, cfg: ModelConfig, spec: LayerSpec, *,
                 positions, mode: str, cache=None, pos=None,
                 encoder_out=None, causal: bool = True,
                 use_pallas: bool = False, dist=None, moe_ctx=None,
-                shard_ctx=None, paged=None):
-    """Returns (h, new_cache, aux)."""
+                shard_ctx=None, paged=None, tp_ctx=None):
+    """Returns (h, new_cache, aux).
+
+    ``tp_ctx`` is the explicitly-scheduled tensor-parallel context
+    (``train/train_step.py`` builds it inside the shard_map'd tp step):
+    ``h`` arrives SEQUENCE-SHARDED over the model axis — (B, S/ms, d) —
+    and each sublayer's parallel region is entered with one
+    ``tp_ctx["gather"]`` (all_gather of the normed activations back to
+    full sequence) and left with one ``tp_ctx["scatter"]``
+    (psum_scatter of the sublayer's partial (B, S, d) output back to
+    the sequence shard), so the residual stream between blocks never
+    materializes the full sequence per rank.  Attention runs with its
+    local head slice, the MLP with its local d_ff slice — their outputs
+    are partial sums over the model axis, which is exactly what the
+    psum_scatter reduces.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
     cache = cache or {}
@@ -100,6 +114,8 @@ def apply_block(bp, shared, h, cfg: ModelConfig, spec: LayerSpec, *,
 
     # ---- mixer ----
     x = apply_norm(p["ln1"], h, cfg)
+    if tp_ctx is not None:
+        x = tp_ctx["gather"](x)
     if spec.kind == MAMBA:
         mx, mc = apply_mamba(p["mixer"], x, cfg, mode=mode,
                              cache=cache.get("mixer"), use_pallas=use_pallas)
@@ -114,6 +130,8 @@ def apply_block(bp, shared, h, cfg: ModelConfig, spec: LayerSpec, *,
                             shard_ctx=shard_ctx, paged=paged)
     if mc is not None:
         new_cache["mixer"] = mc
+    if tp_ctx is not None:
+        mx = tp_ctx["scatter"](mx)
     if cfg.post_norms and spec.kind != MAMBA and spec.kind != SHARED_ATTN:
         mx = apply_norm(bp["post1"], mx, cfg)
     h = h + mx
@@ -142,6 +160,15 @@ def apply_block(bp, shared, h, cfg: ModelConfig, spec: LayerSpec, *,
             ctx = moe_ctx or {}
             mx, moe_aux = apply_moe(p["moe"], x, cfg, **ctx)
             aux = aux + moe_aux
+        elif tp_ctx is not None:
+            # column-parallel up (local d_ff slice) / row-parallel down:
+            # the output bias is deferred past the psum_scatter so it is
+            # added once, not once per model rank
+            mx = apply_mlp(p["mlp"], tp_ctx["gather"](x), cfg,
+                           bias_out=False)
+            mx = tp_ctx["scatter"](mx)
+            if "bo" in p["mlp"]:
+                mx = mx + p["mlp"]["bo"].astype(mx.dtype)
         else:
             mx = apply_mlp(p["mlp"], x, cfg)
         if cfg.post_norms and spec.kind != SHARED_ATTN:
@@ -155,7 +182,7 @@ def apply_group(pg, shared, h, cfg: ModelConfig, group: ScheduleGroup, *,
                 encoder_out=None, causal: bool = True, remat: bool = False,
                 use_pallas: bool = False, dist=None, moe_ctx=None,
                 constrain: Optional[Callable] = None, shard_ctx=None,
-                paged=None):
+                paged=None, tp_ctx=None):
     """Scan the group over its ``repeats`` axis.
 
     Returns (h, new_cache_g, aux_sum).
@@ -167,7 +194,7 @@ def apply_group(pg, shared, h, cfg: ModelConfig, group: ScheduleGroup, *,
             mode=mode, cache=cl_pi, pos=pos,
             encoder_out=encoder_out, causal=causal,
             use_pallas=use_pallas, dist=dist, moe_ctx=moe_ctx,
-            shard_ctx=shard_ctx, paged=paged,
+            shard_ctx=shard_ctx, paged=paged, tp_ctx=tp_ctx,
         )
         if constrain is not None:
             out = (constrain(out[0]), out[1], out[2])

@@ -106,12 +106,17 @@ def _act(x, kind: str):
     raise ValueError(kind)
 
 
-def apply_mlp(p, x, cfg: ModelConfig):
+def apply_mlp(p, x, cfg: ModelConfig, *, bias_out: bool = True):
+    """``bias_out=False`` defers the output bias: the tensor-parallel
+    row-parallel down-projection produces a PARTIAL sum per model rank,
+    so ``bo`` must be added once after the psum_scatter (blocks.py),
+    not once per rank."""
     if cfg.gated_mlp:
         h = _act(x @ p["wg"], cfg.mlp_act) * (x @ p["wi"])
         return h @ p["wo"]
     h = _act(x @ p["wi"] + p["bi"], cfg.mlp_act)
-    return h @ p["wo"] + p["bo"]
+    out = h @ p["wo"]
+    return out + p["bo"] if bias_out else out
 
 
 # ---------------------------------------------------------------------------

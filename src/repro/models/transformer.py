@@ -84,7 +84,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
             cache=None, use_pallas: bool = False, remat: bool = False,
             dist=None, moe_ctx=None, constrain: Optional[Callable] = None,
             act_dtype=jnp.float32, return_hidden: bool = False,
-            shard_ctx=None, paged=None):
+            shard_ctx=None, paged=None, tp_ctx=None):
     """Returns (logits | hidden, new_cache, aux).
 
     batch keys: tokens (B,S) [decode: (B,1)], optional image_embeds,
@@ -96,6 +96,14 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
     cache leaves are page pools addressed through ``paged["tables"]``;
     in prefill mode ``paged["length"]`` carries the true prompt length
     of a right-padded prompt bucket.
+
+    ``tp_ctx`` (tensor-parallel train step only) switches the residual
+    stream to the sequence-parallel layout: the embedding is computed
+    full-sequence (cheap, and exact — every model rank holds identical
+    replicated embed params), then ``tp_ctx["slice_seq"]`` cuts h to
+    this rank's S/ms rows; blocks gather/scatter around each parallel
+    region (see ``models/blocks.py``), and the returned hidden is
+    sequence-LOCAL — the caller slices labels/masks to match.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -116,6 +124,9 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
         img = batch["image_embeds"].astype(h.dtype)  # (B, n_img, d) stub
         h = jax.lax.dynamic_update_slice(h, img, (0, 0, 0))
 
+    if tp_ctx is not None:
+        h = tp_ctx["slice_seq"](h)
+
     encoder_out = None
     if cfg.is_encoder_decoder and mode != "decode":
         encoder_out = _encode(params, cfg, batch["audio_frames"].astype(h.dtype),
@@ -133,6 +144,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, mode: str,
             encoder_out=encoder_out, causal=causal, remat=remat,
             use_pallas=use_pallas, dist=dist, moe_ctx=moe_ctx,
             constrain=constrain, shard_ctx=shard_ctx, paged=paged,
+            tp_ctx=tp_ctx,
         )
         aux = aux + a
         new_cache_groups.append(ncg)

@@ -298,6 +298,57 @@ class StepRunner:
                     dtype_bytes=jnp.dtype(
                         self.run.activation_dtype).itemsize)
             return info
+        tp = self.plan.tp_sync_plan(self.model.param_axes(), abstract)
+        if tp is not None:
+            from repro.analysis.hlocost import tp_activation_bytes
+
+            ms = self.plan.tp_size
+            n_dp = self.plan.dp_size
+            fsdp = self.plan.tp_scatter_plan(self.model.param_axes(),
+                                             abstract)
+            if fsdp is None:
+                # pure tp: tp-sharded grads ring over data only, the
+                # dense rest over the whole (model x data) sync group
+                buckets = tp.buckets
+                info["wire_bytes_per_device"] = (
+                    gradsync.ring_allreduce_bytes(tp.stage_bytes, n_dp)
+                    + gradsync.ring_allreduce_bytes(tp.replicated_bytes,
+                                                    n_dp * ms))
+            else:
+                # fsdp_tp: dense grads psum over model (tp.replicated),
+                # then the ZeRO-3 scatter over data; pinned tp leaves
+                # ride the fsdp psum buckets
+                buckets = tp.replicated + fsdp.buckets
+                info["wire_bytes_per_device"] = (
+                    gradsync.ring_allreduce_bytes(tp.replicated_bytes,
+                                                  ms)
+                    + gradsync.reduce_scatter_bytes(fsdp.scatter_bytes,
+                                                    n_dp)
+                    + gradsync.ring_allreduce_bytes(fsdp.psum_bytes,
+                                                    n_dp))
+                sc = set(fsdp.scatter_indices)
+                leaves, _ = self.plan._tp_local_leaves(
+                    self.model.param_axes(), abstract)
+                gather = sum(gradsync.leaf_nbytes(l)
+                             for i, l in enumerate(leaves) if i in sc)
+                info["param_gather_bytes"] = int(gather)
+                info["gather_wire_bytes_per_device"] = \
+                    gradsync.all_gather_bytes(gather, n_dp)
+            info.update(gradsync.bucket_plan_stats(buckets))
+            info["bucket_bytes"] = [b.nbytes for b in buckets]
+            info["n_tp_buckets"] = len(tp.stage)
+            info["n_replicated_buckets"] = len(tp.replicated)
+            n_micro = self.plan.n_micro
+            rows = self.plan.local_batch // n_micro
+            # the activation-path collectives (2 ag + 2 rs per block)
+            # are the cost the sequence-parallel layout pays for never
+            # materializing full-seq activations between blocks
+            info["tp_wire_bytes_per_device"] = tp_activation_bytes(
+                self.model.cfg, rows, self.run.shape.seq_len, ms,
+                dtype_bytes=jnp.dtype(
+                    self.run.activation_dtype).itemsize,
+                n_micro=n_micro)
+            return info
         sp = self.plan.scatter_plan(abstract)
         if sp is not None:
             n = self.plan.dp_size

@@ -28,6 +28,20 @@ Gradient synchronization is dispatched through the
   shared-expert FFN overlaps the exchange), expert-sharded gradients
   psum over the data axes only, and everything else reuses the
   bucketed-psum machinery over all dp axes.
+* ``tp_overlap`` (tp / fsdp_tp, ``model`` axis > 1) — Megatron-style
+  tensor parallelism with the activation collectives explicitly
+  scheduled inside the ``shard_map``'d step: attention heads and the
+  FFN hidden dim are column/row-partitioned over ``model``, the
+  residual stream rides SEQUENCE-SHARDED between blocks, and each
+  block's parallel region is entered with exactly one ``all_gather``
+  and left with exactly one ``psum_scatter`` (see ``models/blocks.py``)
+  — each collective depending only on its own sublayer, so it overlaps
+  the adjacent sublayers' compute the same way the bucketed grad syncs
+  overlap backward.  tp-sharded grads psum over data only, dense grads
+  over ``('model',) + data`` (the pipeline sync with ``model`` in the
+  role of ``pipe``); under fsdp_tp the dense leaves additionally live
+  ZeRO-3-sharded over ``data`` and ride the scatter machinery with the
+  tp leaves pinned into its psum category.
 * ``xla_fused`` / ``none`` — the seed pjit path: the partitioner derives
   any collectives from the param/grad shardings.
 """
@@ -49,7 +63,7 @@ from repro.distributed import pipeline as pipe
 from repro.distributed import sharding as shd
 from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_EP,
                                         GRAD_SYNC_PIPE, GRAD_SYNC_SCATTER,
-                                        ParallelPlan)
+                                        GRAD_SYNC_TP, ParallelPlan)
 from repro.models.attention import DistDecode
 from repro.models.model import Model
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -161,7 +175,8 @@ def build_attn_ctx(cfg, mesh, run: RunConfig, global_batch: int,
 
 def loss_for(model: Model, params, batch, *, run: RunConfig,
              mesh: Optional[Mesh] = None, constrain=None, shard_ctx=None,
-             axis_names=None, dp_size: int = 1, moe_ctx=None):
+             axis_names=None, dp_size: int = 1, moe_ctx=None,
+             tp_ctx=None):
     """Loss + metrics.  Two calling modes:
 
     * Global (default): under pjit the reductions span the full batch —
@@ -182,6 +197,13 @@ def loss_for(model: Model, params, batch, *, run: RunConfig,
     router's batch statistics are pmean'd to their global values — the
     Switch aux is nonlinear in those means, so this is what keeps
     sum-of-local-grads == global-grad for MoE (see ``route``).
+
+    ``tp_ctx`` (tp_overlap step only, per-shard mode) switches the model
+    to the sequence-parallel layout: the returned hidden is
+    sequence-LOCAL, so the caller must pass ``labels``/``loss_mask``
+    already sliced to this model rank's seq rows, and ``axis_names``
+    must include ``model`` so the loss denominator spans the full
+    sequence.
     """
     cfg = model.cfg
     if shard_ctx is None and mesh is not None:
@@ -195,7 +217,7 @@ def loss_for(model: Model, params, batch, *, run: RunConfig,
     h, _, aux = model.apply(
         params, batch, mode="train", remat=run.remat,
         use_pallas=run.use_pallas, act_dtype=_act_dtype(run),
-        moe_ctx=moe_ctx,
+        moe_ctx=moe_ctx, tp_ctx=tp_ctx,
         constrain=constrain, return_hidden=True, shard_ctx=shard_ctx,
     )
     labels = batch["labels"]
@@ -254,6 +276,8 @@ def make_train_step(model: Model, run: RunConfig, opt: AdamWConfig,
         return _make_pipeline_step(model, run, opt, plan)
     if plan.grad_sync == GRAD_SYNC_EP:
         return _make_ep_step(model, run, opt, plan)
+    if plan.grad_sync == GRAD_SYNC_TP:
+        return _make_tp_step(model, run, opt, plan)
     constrain = None
     if mesh is not None:
         constrain = shd.activation_sharding(
@@ -339,6 +363,25 @@ def make_grad_fn(model: Model, run: RunConfig,
         # oracle leaf-for-leaf
         return shd.shard_map(
             ep_body, mesh=plan.mesh,
+            in_specs=(pspecs, _dp_batch_spec(plan)),
+            out_specs=(P(), pspecs, P()), check_vma=False)
+    if plan.grad_sync == GRAD_SYNC_TP:
+        accum, axis, _, _ = _tp_accum(model, run, plan)
+        pspecs = plan.param_specs(
+            model.param_axes(),
+            model.abstract(jnp.dtype(run.param_dtype)))
+
+        def tp_body(params, batch):
+            loss, grads, metrics = accum(params, batch)
+            return jax.lax.psum(loss, axis), grads, metrics
+
+        # tp grads come out as per-rank head/ff slices (and, under
+        # fsdp_tp, dense grads as per-data-rank ZeRO-3 shards); the
+        # P('model')/P(data)-on-shard-dim out specs reassemble the full
+        # summed gradient tree, so callers compare against the fused
+        # reference leaf-for-leaf
+        return shd.shard_map(
+            tp_body, mesh=plan.mesh,
             in_specs=(pspecs, _dp_batch_spec(plan)),
             out_specs=(P(), pspecs, P()), check_vma=False)
     if plan.grad_sync == GRAD_SYNC_PIPE:
@@ -439,9 +482,14 @@ def _scatter_accum(model: Model, run: RunConfig, plan: ParallelPlan):
     shard's contribution, metrics are globally reduced.
 
     The gather runs once per step, OUTSIDE the microbatch scan — full
-    params persist across microbatches (per-layer regather would save
-    that memory at n_micro x the gather traffic), and the scatter runs
-    once, on the final accumulated gradients.
+    params persist across microbatches, and the scatter runs once, on
+    the final accumulated gradients.  ``plan.free_after_use`` flips the
+    trade: the (checkpointed) gather moves INSIDE each microbatch's vjp,
+    so full-width params are gathered on entry, freed after use, and
+    re-gathered during backward instead of held live across the step —
+    peak temp memory drops by about the gathered tree, gather wire runs
+    ``2 x n_micro`` per step.  The ``fsdp_overlap`` benchmark reports
+    both sides so the flip point is measured, not guessed.
 
     With ``plan.donate_gather`` (default, engages when there is no
     microbatch accumulation) the step differentiates FROM THE SHARDS
@@ -460,7 +508,8 @@ def _scatter_accum(model: Model, run: RunConfig, plan: ParallelPlan):
     axis = _axis_arg(plan.dp_axes)
     sp = plan.scatter_plan(model.abstract(jnp.dtype(run.param_dtype)))
     n_micro = run.microbatch or 1
-    gather = lambda lp: gradsync.gather_fsdp_params(lp, axis, sp)
+    gather = lambda lp: gradsync.gather_fsdp_params(
+        lp, axis, sp, free_after_use=plan.free_after_use)
 
     if plan.donate_gather and n_micro == 1:
         def accum(local_params, batch):
@@ -475,6 +524,26 @@ def _scatter_accum(model: Model, run: RunConfig, plan: ParallelPlan):
             # needs its plain-psum buckets
             grads = gradsync.bucketed_psum(grads, axis, sp.psum)
             return loss, grads, metrics
+
+        return accum, axis, sp
+
+    if plan.free_after_use:
+        # per-microbatch regather: differentiate FROM THE SHARDS with
+        # the checkpointed gather inside the vjp, so each microbatch
+        # gathers its params on entry, re-gathers during backward
+        # (``jax.checkpoint`` drops the gathered tree from the residual
+        # set), and the gather's transpose psum_scatters the cotangents
+        # straight back to shards.  Peak memory holds about one
+        # bucket's full params; gather wire runs 2 x n_micro per step.
+        def accum(local_params, batch):
+            def loss_sh(lp, b):
+                return loss_for(model, gather(lp), b, run=run, mesh=None,
+                                axis_names=axis, dp_size=plan.dp_size)
+
+            return accumulate_grads(
+                loss_sh, local_params, batch, n_micro,
+                sync_grads=lambda g: gradsync.bucketed_psum(
+                    g, axis, sp.psum))
 
         return accum, axis, sp
 
@@ -590,6 +659,167 @@ def _make_ep_step(model: Model, run: RunConfig, opt: AdamWConfig,
     def body(state, batch):
         _, grads, metrics = accum(state["params"], batch)
         gnorm = pipe.pipe_global_norm(grads, sp, "expert")
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt, grads, state["opt"], state["params"], grad_norm=gnorm)
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return shd.shard_map(
+        body, mesh=plan.mesh,
+        in_specs=(state_spec, _dp_batch_spec(plan)),
+        out_specs=(state_spec, P()), check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel step (tp_overlap: models/blocks.py gather/scatter schedule)
+# ---------------------------------------------------------------------------
+
+
+def _tp_ctx(plan: ParallelPlan, seq_len: int):
+    """The explicitly-scheduled TP collective context threaded into
+    ``apply_block`` (must run inside ``shard_map`` over a mesh carrying
+    ``model``).  Activations between blocks are sequence-sharded —
+    (B, S/ms, d) — so each parallel region costs exactly one tiled
+    ``all_gather`` in (full-seq activations from shards) and one tiled
+    ``psum_scatter`` out (reducing the partial sublayer outputs over
+    ``model`` AND re-sharding the sequence in the same collective — the
+    Megatron sequence-parallel identity that replaces an all-reduce +
+    slice).  Returns ``(tp_ctx, slice_seq)``; ``slice_seq`` also cuts
+    labels/masks to this rank's rows."""
+    s_loc = seq_len // plan.tp_size
+
+    def slice_seq(x):
+        start = jax.lax.axis_index("model") * s_loc
+        return jax.lax.dynamic_slice_in_dim(x, start, s_loc, axis=1)
+
+    ctx = {
+        "gather": lambda x: jax.lax.all_gather(
+            x, "model", axis=1, tiled=True),
+        "scatter": lambda x: jax.lax.psum_scatter(
+            x, "model", scatter_dimension=1, tiled=True),
+        "slice_seq": slice_seq,
+    }
+    return ctx, slice_seq
+
+
+def _tp_accum(model: Model, run: RunConfig, plan: ParallelPlan):
+    """Shared core of the ``tp_overlap`` paths (train step and
+    ``make_grad_fn``): sequence-parallel per-shard loss (labels sliced
+    to this model rank's rows, denominator psum'd over data AND
+    ``model``) -> local microbatch accumulation -> split grad sync.
+    tp-sharded leaves (local head/ff slices) psum over the data axes
+    only — structurally the pipeline sync with ``model`` in the role of
+    ``pipe`` — while dense leaves psum over ``('model',) + data``.
+
+    Under fsdp_tp with real data parallelism the dense leaves
+    additionally live ZeRO-3-sharded over data: forward rebuilds them
+    with the bucketed ``all_gather`` (tp leaves pass through untouched
+    — they are pinned into the scatter plan's psum category), and the
+    backward sync composes the model-axis psum (dense leaves) with the
+    data-axis ``psum_scatter`` back to shards.
+
+    Returns ``(accum(params, local_batch) -> (loss, grads, metrics),
+    axis, tp_sp, fsdp_plan)``; ``fsdp_plan`` is None for the pure-tp
+    (replicated-dense) variant.  ``accum`` must run INSIDE shard_map
+    over the plan's mesh."""
+    axes = plan.dp_axes + ("model",)
+    axis = _axis_arg(axes)
+    abstract = model.abstract(jnp.dtype(run.param_dtype))
+    axes_tree = model.param_axes()
+    sp = plan.tp_sync_plan(axes_tree, abstract)
+    fsdp = plan.tp_scatter_plan(axes_tree, abstract)
+    ctx, slice_seq = _tp_ctx(plan, run.shape.seq_len)
+    n_micro = run.microbatch or 1
+    # every device (dp x model) adds aux/n once; non-MoE models (the
+    # only ones tp engages for) have aux == 0, but keep the count honest
+    n_dev = plan.dp_size * plan.tp_size
+
+    def loss_fn(p, b):
+        bl = dict(b)
+        bl["labels"] = slice_seq(b["labels"])
+        if b.get("loss_mask") is not None:
+            bl["loss_mask"] = slice_seq(b["loss_mask"])
+        return loss_for(model, p, bl, run=run, mesh=None,
+                        axis_names=axis, dp_size=n_dev, tp_ctx=ctx)
+
+    if fsdp is None:
+        def accum(params, batch):
+            return accumulate_grads(
+                loss_fn, params, batch, n_micro,
+                sync_grads=lambda g: pipe.pipe_grad_sync(
+                    g, sp, "model", plan.dp_axes))
+
+        return accum, axis, sp, None
+
+    data_axis = _axis_arg(plan.dp_axes)
+
+    def sync(g):
+        # dense grads to their model-summed values first (tp buckets are
+        # skipped — empty dp_axes arg), then the ZeRO-3 scatter over
+        # data; pinned tp leaves ride its psum buckets, which IS their
+        # remaining data-axis sync
+        g = pipe.pipe_grad_sync(g, sp, "model", ())
+        return gradsync.bucketed_psum_scatter(g, data_axis, fsdp)
+
+    def accum(local_params, batch):
+        full = gradsync.gather_fsdp_params(
+            local_params, data_axis, fsdp,
+            free_after_use=plan.free_after_use)
+
+        return accumulate_grads(loss_fn, full, batch, n_micro,
+                                sync_grads=sync)
+
+    return accum, axis, sp, fsdp
+
+
+def _tp_global_norm(grads, plan: ParallelPlan, sp, fsdp) -> jnp.ndarray:
+    """Global L2 norm of a synced ``tp_overlap`` grad tree.  Pure tp is
+    exactly the pipeline norm with ``model`` as the pipe axis.  fsdp_tp
+    needs the three-way split: ZeRO-3 dense leaves are disjoint shards
+    across DATA ranks (psum over data), tp leaves disjoint slices
+    across MODEL ranks (psum over model), and the un-shardable dense
+    remainder is identical everywhere (counted once)."""
+    if fsdp is None:
+        return pipe.pipe_global_norm(grads, sp, "model")
+    leaves = jax.tree_util.tree_leaves(grads)
+    tp = set(sp.stage_indices)
+    sc = set(fsdp.scatter_indices)
+    sq = lambda x: jnp.sum(jnp.square(x.astype(jnp.float32)))
+    z = jnp.zeros((), jnp.float32)
+    sq_tp = sum((sq(l) for i, l in enumerate(leaves) if i in tp), z)
+    sq_sc = sum((sq(l) for i, l in enumerate(leaves) if i in sc), z)
+    sq_rep = sum((sq(l) for i, l in enumerate(leaves)
+                  if i not in tp and i not in sc), z)
+    data_axis = _axis_arg(plan.dp_axes)
+    return jnp.sqrt(jax.lax.psum(sq_tp, "model")
+                    + jax.lax.psum(sq_sc, data_axis) + sq_rep)
+
+
+def _make_tp_step(model: Model, run: RunConfig, opt: AdamWConfig,
+                  plan: ParallelPlan) -> Callable:
+    """The tensor-parallel (tp_overlap) train step.
+
+    Attention q/k/v/o and the FFN up/down projections live SHARDED over
+    ``model`` on their heads / kv_heads / ff logical dims — Adam moments
+    alike, so each model rank stores and updates only its slice
+    (``ParallelPlan.tp_param_specs``); under fsdp_tp the dense remainder
+    is additionally ZeRO-3-sharded over ``data``.  Inside one
+    ``shard_map``: activations ride sequence-sharded between blocks,
+    each sublayer gathers the full sequence on entry and
+    reduce-scatters its partial output on exit (one collective each
+    way, overlapping adjacent compute), grads take the split
+    model/data psum schedule, and the optimizer updates rank-local
+    state with a globally-assembled clipping norm.
+    """
+    accum, _, sp, fsdp = _tp_accum(model, run, plan)
+    pspecs = plan.param_specs(
+        model.param_axes(), model.abstract(jnp.dtype(run.param_dtype)))
+    state_spec = {"params": pspecs,
+                  "opt": {"mu": pspecs, "nu": pspecs, "step": P()}}
+
+    def body(state, batch):
+        _, grads, metrics = accum(state["params"], batch)
+        gnorm = _tp_global_norm(grads, plan, sp, fsdp)
         new_params, new_opt, opt_metrics = adamw_update(
             opt, grads, state["opt"], state["params"], grad_norm=gnorm)
         metrics = {**metrics, **opt_metrics}
@@ -740,7 +970,11 @@ def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
     (and their moments) split over ``pipe`` on the layers dim.  Under an
     ``ep_overlap`` plan it is the expert layout: leaves with an
     ``experts`` logical dim (and their moments) split over ``expert``
-    on that dim, the rest replicated."""
+    on that dim, the rest replicated.  Under a ``tp_overlap`` plan it
+    is the merged tp layout (``ParallelPlan.param_specs``): heads /
+    kv_heads / ff leaves split over ``model``, and — for fsdp_tp with
+    real data parallelism — the dense remainder ZeRO-3-sharded over
+    the dp axes."""
     if plan is not None and plan.grad_sync == GRAD_SYNC_SCATTER:
         specs = plan.scatter_param_specs(
             model.abstract(jnp.dtype(run.param_dtype)))
@@ -753,6 +987,12 @@ def state_shardings(model: Model, mesh: Mesh, run: RunConfig,
             lambda s: NamedSharding(mesh, s), specs)
     elif plan is not None and plan.grad_sync == GRAD_SYNC_EP:
         specs = plan.ep_param_specs(
+            model.param_axes(),
+            model.abstract(jnp.dtype(run.param_dtype)))
+        p_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), specs)
+    elif plan is not None and plan.grad_sync == GRAD_SYNC_TP:
+        specs = plan.param_specs(
             model.param_axes(),
             model.abstract(jnp.dtype(run.param_dtype)))
         p_sh = jax.tree_util.tree_map(

@@ -20,7 +20,8 @@ from _subproc import run_py
 from repro.distributed import gradsync
 from repro.distributed.sharding import (GRAD_SYNC_BUCKETED, GRAD_SYNC_EP,
                                         GRAD_SYNC_NONE, GRAD_SYNC_SCATTER,
-                                        GRAD_SYNC_XLA, ParallelPlan)
+                                        GRAD_SYNC_TP, GRAD_SYNC_XLA,
+                                        ParallelPlan)
 
 
 # ---------------------------------------------------------------------------
@@ -161,18 +162,19 @@ def test_plan_single_shard_and_meshless_skip_sync():
     assert ParallelPlan.make(None, "ddp", 8).grad_sync == GRAD_SYNC_NONE
 
 
-def test_plan_fsdp_modes_scatter_and_tp_falls_back():
+def test_plan_fsdp_modes_scatter_and_tp_engages():
     # fsdp on any multi-shard dp mesh scatters (the model axis carries
-    # no tp specs under mode fsdp); tp-sharded leaves (fsdp_tp with a
-    # real model axis) make buckets indivisible -> xla_fused
+    # no tp specs under mode fsdp); a real model axis under the tp
+    # modes now engages the explicitly-scheduled tp step (the old
+    # tp_sharded -> xla_fused fallback row is gone)
     assert ParallelPlan.make(FakeMesh(data=2, model=2), "fsdp",
                              8).grad_sync == GRAD_SYNC_SCATTER
     assert ParallelPlan.make(FakeMesh(data=4, model=1), "fsdp_tp",
                              8).grad_sync == GRAD_SYNC_SCATTER
     for mode in ("tp", "fsdp_tp"):
         plan = ParallelPlan.make(FakeMesh(data=2, model=2), mode, 8)
-        assert plan.tp_sharded
-        assert plan.grad_sync == GRAD_SYNC_XLA, mode
+        assert plan.tp_engaged and plan.tp_axis == "model"
+        assert plan.grad_sync == GRAD_SYNC_TP, mode
         assert plan.grad_buckets({}) is None
         assert plan.scatter_plan({}) is None
 
@@ -241,9 +243,9 @@ STRATEGY_TABLE = [
     ("fsdp", dict(data=4), 16, 1, True, GRAD_SYNC_SCATTER),  # MoE ok
     ("fsdp", dict(data=1), 8, 1, False, GRAD_SYNC_NONE),
     ("fsdp_tp", dict(data=4, model=1), 16, 1, False, GRAD_SYNC_SCATTER),
-    ("fsdp_tp", dict(data=2, model=2), 16, 1, False, GRAD_SYNC_XLA),
+    ("fsdp_tp", dict(data=2, model=2), 16, 1, False, GRAD_SYNC_TP),
     ("fsdp_tp", dict(data=2, model=2), 16, 1, True, GRAD_SYNC_XLA),
-    ("tp", dict(data=2, model=2), 16, 1, False, GRAD_SYNC_XLA),
+    ("tp", dict(data=2, model=2), 16, 1, False, GRAD_SYNC_TP),
 ]
 
 
@@ -344,6 +346,55 @@ def test_plan_strategy_table_ep(mode, axes, gb, micro, moe, ne, expect,
     else:
         assert reason in (plan.fallback_reason or ""), plan.describe()
     assert plan.ep_engaged == (expect == GRAD_SYNC_EP)
+
+
+# the tensor-parallel half of the fallback spec (docs/parallelism.md
+# table): tp_overlap engages only for the tp modes on a mesh with a
+# real model axis, overlap on, no MoE (the ep dispatch owns the model
+# axis there), and head/ff/seq dims the model axis divides; fsdp_tp on
+# a model-axis-1 mesh degrades gracefully to plain ZeRO-3.
+TP_STRATEGY_TABLE = [
+    # mode, axes, gb, micro, moe, heads, kv, dff, seq
+    #   -> strategy, fallback_reason
+    ("tp", dict(data=2, model=2), 16, 1, False, 4, 2, 256, 64,
+     GRAD_SYNC_TP, None),
+    ("fsdp_tp", dict(data=2, model=2), 16, 1, False, 4, 2, 256, 64,
+     GRAD_SYNC_TP, None),
+    ("fsdp_tp", dict(data=2, model=2), 16, 4, False, 4, 2, 256, 64,
+     GRAD_SYNC_TP, None),
+    # pure tp on a data=1 mesh has no data parallelism but still needs
+    # the explicitly-scheduled step
+    ("tp", dict(data=1, model=2), 8, 1, False, 4, 2, 256, 64,
+     GRAD_SYNC_TP, None),
+    # dims the model axis can't divide: honest fallback, not a crash
+    ("fsdp_tp", dict(data=2, model=2), 16, 1, False, 3, 3, 256, 64,
+     GRAD_SYNC_XLA, "tp-indivisible heads"),
+    ("fsdp_tp", dict(data=2, model=2), 16, 1, False, 4, 2, 255, 64,
+     GRAD_SYNC_XLA, "tp-indivisible d_ff"),
+    ("fsdp_tp", dict(data=2, model=2), 16, 1, False, 4, 2, 256, 63,
+     GRAD_SYNC_XLA, "tp-indivisible seq_len"),
+    # MoE x tp has no composition yet: the fused partitioner carries it
+    ("fsdp_tp", dict(data=2, model=2), 16, 1, True, 4, 2, 256, 64,
+     GRAD_SYNC_XLA, "moe"),
+    # model axis of width 1: fsdp_tp is just ZeRO-3 over data
+    ("fsdp_tp", dict(data=4, model=1), 16, 1, False, 4, 2, 256, 64,
+     GRAD_SYNC_SCATTER, None),
+]
+
+
+@pytest.mark.parametrize("mode,axes,gb,micro,moe,nh,nkv,dff,seq,"
+                         "expect,reason", TP_STRATEGY_TABLE)
+def test_plan_strategy_table_tp(mode, axes, gb, micro, moe, nh, nkv,
+                                dff, seq, expect, reason):
+    plan = ParallelPlan.make(FakeMesh(**axes), mode, gb,
+                             microbatch=micro, has_moe=moe, n_heads=nh,
+                             n_kv_heads=nkv, d_ff=dff, seq_len=seq)
+    assert plan.grad_sync == expect, plan.describe()
+    if reason is None:
+        assert plan.fallback_reason is None, plan.fallback_reason
+    else:
+        assert reason in (plan.fallback_reason or ""), plan.describe()
+    assert plan.tp_engaged == (expect == GRAD_SYNC_TP)
 
 
 def test_plan_ep_describe_and_param_specs():
@@ -782,3 +833,160 @@ def test_bucketed_runner_trains_on_eight_device_mesh():
         assert all(np.isfinite(l) for l in losses), losses
         print('runner-on-mesh OK')
     """, n_devices=8))
+
+
+@pytest.mark.slow
+def test_tp_overlap_matches_fused_on_two_device_mesh():
+    # pure tp on a (data=1, model=2) mesh: the explicit sequence-
+    # parallel schedule (one all_gather into each block's parallel
+    # region, one psum_scatter out) must reproduce the single-device
+    # fused gradients and loss trajectory exactly
+    print(run_py("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.distributed.sharding import ParallelPlan
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import build_model
+        from repro.train.optimizer import AdamWConfig
+        from repro.train.train_step import (init_state, make_grad_fn,
+                                            make_train_step)
+
+        def close(ref, got, rtol=1e-6, floor=1e-8):
+            # leaf scale clamped at 1.0: the tp schedule reorders the
+            # seq-dim reductions (slice + collective transpose), so
+            # tiny-scale leaves see noise marginally above a bare
+            # rtol*max floor — same convention as the tp_overlap bench
+            for a, b in zip(jax.tree_util.tree_leaves(ref),
+                            jax.tree_util.tree_leaves(got)):
+                a, b = np.asarray(a), np.asarray(b)
+                scale = max(float(np.abs(a).max()), 1.0)
+                np.testing.assert_allclose(b, a, rtol=rtol,
+                                           atol=rtol * scale + floor)
+
+        B, S = 8, 32
+        cfg = dataclasses.replace(reduced(get_config('bert-mlm-120m'),
+                                          d_model=64),
+                                  vocab_size=256, max_position=S)
+        model = build_model(cfg)
+        mesh = make_host_mesh(data=1, model=2)
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 4,
+                                  cfg.vocab_size)
+        for n_micro in (1, 4):
+            # micro=1 carries the ragged-mask case (seq-sliced rows see
+            # different masked counts per model rank), micro=4 the
+            # uniform one
+            if n_micro == 1:
+                mask = (jax.random.uniform(jax.random.PRNGKey(2),
+                                           (B, S)) > 0.3).astype(
+                                               jnp.float32)
+            else:
+                mask = jnp.ones((B, S), jnp.float32)
+            batch = {'tokens': toks, 'labels': jnp.roll(toks, -1, 1),
+                     'loss_mask': mask}
+            run = RunConfig(model=cfg,
+                            shape=ShapeConfig('t', S, B, 'train'),
+                            sharding='tp', param_dtype='float32',
+                            activation_dtype='float32',
+                            microbatch=n_micro)
+            params = init_state(model, jax.random.PRNGKey(0),
+                                run)['params']
+            _, gref, mref = jax.jit(make_grad_fn(model, run))(params,
+                                                              batch)
+            plan = ParallelPlan.for_run(run, mesh, grad_bucket_mb=0.05)
+            assert plan.grad_sync == 'tp_overlap', plan.describe()
+            _, gt, mt = jax.jit(make_grad_fn(model, run, mesh, plan))(
+                params, batch)
+            close(gref, gt)                                   # rtol 1e-6
+            np.testing.assert_allclose(float(mref['loss']),
+                                       float(mt['loss']), rtol=1e-6)
+
+            # identical loss + grad-norm trajectory over 4 full steps
+            step_t = jax.jit(make_train_step(model, run, opt, mesh,
+                                             plan=plan))
+            step_f = jax.jit(make_train_step(model, run, opt))
+            st = init_state(model, jax.random.PRNGKey(0), run)
+            sf = init_state(model, jax.random.PRNGKey(0), run)
+            for _ in range(4):
+                st, m_t = step_t(st, batch)
+                sf, m_f = step_f(sf, batch)
+                np.testing.assert_allclose(float(m_f['loss']),
+                                           float(m_t['loss']),
+                                           rtol=1e-6)
+                np.testing.assert_allclose(float(m_f['grad_norm']),
+                                           float(m_t['grad_norm']),
+                                           rtol=1e-5)
+            print(f'tp micro={n_micro} OK')
+        print('tp equivalence OK')
+    """, n_devices=2))
+
+
+@pytest.mark.slow
+def test_fsdp_tp_runner_trains_on_four_device_mesh():
+    # fsdp_tp on a 2x2 (data x model) mesh: dense leaves ZeRO-3 over
+    # 'data', tp leaves sharded over 'model', optimizer moments
+    # following params — with the tp telemetry surfaced
+    print(run_py("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.configs.base import RunConfig, ShapeConfig
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import build_model
+        from repro.train.optimizer import AdamWConfig
+        from repro.train.runner import StepRunner, TrainLoop
+
+        B, S = 8, 32
+        cfg = dataclasses.replace(reduced(get_config('bert-mlm-120m'),
+                                          d_model=64),
+                                  vocab_size=256, max_position=S)
+        model = build_model(cfg)
+        run = RunConfig(model=cfg, shape=ShapeConfig('t', S, B, 'train'),
+                        sharding='fsdp_tp', param_dtype='float32',
+                        activation_dtype='float32')
+        runner = StepRunner(model, run, AdamWConfig(total_steps=6),
+                            make_host_mesh(data=2, model=2),
+                            grad_bucket_mb=0.05)
+        info = runner.grad_sync_info()
+        assert info['grad_sync'] == 'tp_overlap', info
+        assert info['tp_engaged'] and info['tp_size'] == 2
+        assert info['n_tp_buckets'] >= 1
+        assert info['tp_wire_bytes_per_device'] > 0
+        assert info['param_gather_bytes'] > 0
+
+        rng = np.random.default_rng(0)
+        def batches():
+            while True:
+                t = rng.integers(4, 256, (B, S)).astype(np.int32)
+                yield {'tokens': t, 'labels': t,
+                       'loss_mask': np.ones((B, S), np.float32)}
+
+        state, log = TrainLoop(runner, log_every=2).run(batches(), 6)
+        assert log.telemetry['n_traces'] == 1         # jit-once preserved
+        assert log.telemetry['grad_sync'] == 'tp_overlap'
+        losses = [m['loss'] for m in log.metrics]
+        assert all(np.isfinite(l) for l in losses), losses
+
+        # state layout: tp leaves live sharded over 'model' (local
+        # shard = 1/2 along the sharded dim), dense ZeRO-3 leaves over
+        # 'data', and every optimizer moment follows its param
+        leaves = jax.tree_util.tree_leaves(state['params'])
+        specs = [tuple(l.sharding.spec) for l in leaves]
+        assert any('model' in s for s in specs), specs
+        assert any('data' in s for s in specs), specs
+        tp_leaf = next(l for l, s in zip(leaves, specs) if 'model' in s)
+        ax = tuple(tp_leaf.sharding.spec).index('model')
+        shard = tp_leaf.addressable_shards[0].data
+        assert shard.shape[ax] == tp_leaf.shape[ax] // 2
+        zl = next(l for l, s in zip(leaves, specs) if 'data' in s)
+        zax = tuple(zl.sharding.spec).index('data')
+        assert zl.addressable_shards[0].data.shape[zax] \\
+            == zl.shape[zax] // 2
+        for part in ('mu', 'nu'):
+            for p, m in zip(leaves,
+                            jax.tree_util.tree_leaves(
+                                state['opt'][part])):
+                assert p.sharding.spec == m.sharding.spec, (part,
+                                                            p.shape)
+        print('fsdp_tp runner-on-mesh OK')
+    """, n_devices=4))
