@@ -182,19 +182,34 @@ class DataPipeline:
     def start_step(self) -> int:
         return self._start_step
 
-    def restore(self, state) -> "DataPipeline":
+    def restore(self, state, *, elastic: bool = False) -> "DataPipeline":
         """Re-aim the pipeline at a saved position.  Accepts a
         :class:`PipelineState` or its ``to_json`` dict.  The dataset and
         global batch must match; ``process_index`` may differ (a host may
         restore a shard written under a different rank layout only if the
-        process count is unchanged)."""
+        process count is unchanged).
+
+        With ``elastic=True`` the per-host layout check is relaxed to a
+        GLOBAL-batch equality check: the deterministic order is defined
+        over ``batch_size * process_count`` examples per step, so any
+        host layout with the same product consumes the identical example
+        sequence — each host just takes a different contiguous slice of
+        it.  This is the input-side half of the topology-resharding
+        restore (``distributed/reshard.py``)."""
         if isinstance(state, dict):
             state = PipelineState.from_json(state)
         if state.n_examples != self.ds.n_examples:
             raise ValueError(
                 f"checkpoint was taken over {state.n_examples} examples, "
                 f"dataset has {self.ds.n_examples}")
-        if (state.batch_size, state.process_count) != \
+        if elastic:
+            if state.batch_size * state.process_count != self.global_batch:
+                raise ValueError(
+                    "elastic restore requires an unchanged GLOBAL batch: "
+                    f"checkpoint {state.batch_size} x {state.process_count}"
+                    f" = {state.batch_size * state.process_count}, "
+                    f"pipeline global batch {self.global_batch}")
+        elif (state.batch_size, state.process_count) != \
                 (self.batch_size, self.process_count):
             raise ValueError(
                 "checkpoint batch/process layout "

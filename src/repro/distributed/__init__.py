@@ -11,10 +11,12 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-from repro.distributed import gradsync, pipeline, sharding  # noqa: F401
+from repro.distributed import gradsync, pipeline, reshard, sharding  # noqa: F401
+from repro.distributed.reshard import restore_resharded  # noqa: F401
 from repro.distributed.sharding import ParallelPlan  # noqa: F401
 
-__all__ = ["ParallelPlan", "gradsync", "pipeline", "sharding",
+__all__ = ["ParallelPlan", "gradsync", "pipeline", "reshard",
+           "restore_resharded", "sharding",
            "maybe_initialize_distributed"]
 
 # env keys consulted by maybe_initialize_distributed, in priority order;

@@ -36,6 +36,17 @@ under ``--sharding fsdp_tp`` (the implied default).
 
 Resuming from a pinned ``--ckpt-step N`` protects checkpoint N from
 ``--keep-last-k`` GC for the rest of the run (docs/resume.md).
+
+Elastic restore: ``--elastic-restore`` routes ``--resume`` through the
+plan-aware resharding reader (``distributed/reshard.py``), so a
+checkpoint written by N processes restores onto THIS topology — any
+process count, any ``--sharding`` plan — each host reading only the
+stored sub-shards overlapping its new shards.  ``--journal-dir`` (point
+it at tmpfs, e.g. ``/dev/shm/run-j``) keeps an every-step last-K
+rollback journal in host memory: a transient step failure rolls back
+in-process, and a killed-and-restarted worker resumes from the journal
+entry — seconds old — instead of the last durable checkpoint
+(``--journal-k`` sets K; see docs/resume.md).
 """
 from __future__ import annotations
 
@@ -81,6 +92,20 @@ def main():
     ap.add_argument("--keep-last-k", type=int, default=0,
                     help="prune committed checkpoints beyond the newest "
                          "K after each save (0 = keep all)")
+    ap.add_argument("--elastic-restore", action="store_true",
+                    help="with --resume: restore through the topology-"
+                         "resharding reader, so the checkpoint may have "
+                         "been written by a different process count / "
+                         "sharding plan (global batch must be unchanged)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="every-step rollback-journal directory (use "
+                         "tmpfs, e.g. /dev/shm/<run>); --resume prefers "
+                         "its newest entry over older disk checkpoints")
+    ap.add_argument("--journal-k", type=int, default=0,
+                    help="rollback-journal depth; >0 without "
+                         "--journal-dir keeps the ring in process "
+                         "memory only (in-process rollback, no restart "
+                         "recovery); 0 with --journal-dir defaults to 2")
     ap.add_argument("--sharding", default="ddp",
                     choices=["ddp", "fsdp", "tp", "fsdp_tp", "pp",
                              "pp_dp"],
@@ -304,20 +329,52 @@ def main():
 
     state, start_step = None, 0
     if args.resume:
-        if not args.ckpt_dir:
-            ap.error("--resume needs --ckpt-dir")
+        if not args.ckpt_dir and not args.journal_dir:
+            ap.error("--resume needs --ckpt-dir (or --journal-dir)")
         from repro.train import checkpoint as ckpt
 
-        if args.ckpt_step is None and ckpt.latest_step(args.ckpt_dir) is None:
+        # newest recoverable state wins: a journal entry (seconds old,
+        # in tmpfs) beats an older durable checkpoint — unless the
+        # operator pinned an exact --ckpt-step
+        ck_step = ckpt.latest_step(args.ckpt_dir) if args.ckpt_dir else None
+        j_step = ckpt.latest_step(args.journal_dir) \
+            if args.journal_dir else None
+        if args.ckpt_step is not None:
+            src, step_arg = args.ckpt_dir, args.ckpt_step
+        elif j_step is not None and (ck_step is None or j_step > ck_step):
+            src, step_arg = args.journal_dir, None
+        elif ck_step is not None:
+            src, step_arg = args.ckpt_dir, None
+        else:
+            src = None
+        if src is None:
             print(f"[resume] no complete checkpoint in {args.ckpt_dir}; "
                   "starting fresh")
+        elif args.elastic_restore:
+            from repro.train.runner import resume_resharded
+
+            state, start_step = resume_resharded(src, runner,
+                                                 pipeline=pipeline,
+                                                 step=step_arg)
+            print(f"[resume] host {pidx} reshard-restored step "
+                  f"{start_step} from {src} onto {pcount} process(es)")
         else:
-            state, start_step = resume(args.ckpt_dir, runner,
+            state, start_step = resume(src, runner,
                                        pipeline=pipeline,
                                        process_index=pidx,
-                                       step=args.ckpt_step)
+                                       step=step_arg)
             print(f"[resume] host {pidx} restored shard at step "
-                  f"{start_step} from {args.ckpt_dir}")
+                  f"{start_step} from {src}")
+
+    journal = None
+    if args.journal_dir or args.journal_k > 0:
+        from repro.train.journal import RollbackJournal
+
+        journal = RollbackJournal(args.journal_k if args.journal_k > 0
+                                  else 2,
+                                  dir=args.journal_dir,
+                                  process_index=pidx,
+                                  process_count=pcount)
 
     # a pinned --ckpt-step is an operator decision (e.g. a rollback
     # point): protect it from keep-last-k GC for the rest of this run
@@ -328,7 +385,8 @@ def main():
                      ckpt_every=args.ckpt_every
                      if (args.ckpt or args.ckpt_dir) else 0,
                      keep_last_k=args.keep_last_k, pin_steps=pins,
-                     process_index=pidx, process_count=pcount)
+                     process_index=pidx, process_count=pcount,
+                     journal=journal)
     print(f"[train] {cfg.name}: {model.cfg.n_layers}L d={cfg.d_model} "
           f"on {n_dev} device(s), mesh {dict(mesh.shape)}, "
           f"steps {start_step}->{args.steps}")

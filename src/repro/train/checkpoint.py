@@ -39,6 +39,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.train.faults import fault_point
+
 
 class SubShardLeaf:
     """Host snapshot of a CROSS-PROCESS sharded leaf: only the slices
@@ -68,6 +70,19 @@ class SubShardLeaf:
             if arr.dtype.name == "bfloat16":
                 arr = arr.astype(np.float32)
             self.parts.append((start, arr))
+
+    @classmethod
+    def from_parts(cls, global_shape, parts) -> "SubShardLeaf":
+        """Build a sub-shard snapshot directly from ``(start, array)``
+        pairs — no live jax Array needed.  This is how the reshard tests
+        (and docs snippets) synthesize N-process checkpoint layouts
+        without N real processes: split a host array into slices, hand
+        each "process" its subset, and ``save_sharded`` them."""
+        self = cls.__new__(cls)
+        self.global_shape = tuple(global_shape)
+        self.parts = [(tuple(int(x) for x in start), np.asarray(arr))
+                      for start, arr in parts]
+        return self
 
 
 def _host_leaf(leaf):
@@ -162,9 +177,10 @@ def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
     os.makedirs(d, exist_ok=True)
     flat, subs = _flatten(tree)
     shard = os.path.join(d, _shard_name(process_index))
-    tmp = shard + f".tmp.{os.getpid()}.npz"  # np.savez appends .npz otherwise
-    np.savez(tmp, **flat)
-    os.replace(tmp, shard)
+    # sidecars FIRST, npz last: "shard npz present" must imply "its
+    # sidecars are present", so a kill between the writes can only leave
+    # a directory _complete_steps already rejects (no npz), never a
+    # complete-looking shard whose offsets/pipeline records are missing
     if subs:
         # cross-process leaves: the sub-shard manifest (slice offsets
         # into each global leaf) rides next to this process's npz
@@ -179,6 +195,11 @@ def save_sharded(base_dir: str, tree, *, step: int, process_index: int = 0,
         with open(pj + ".tmp", "w") as f:
             json.dump(pipeline_state, f)
         os.replace(pj + ".tmp", pj)
+    tmp = shard + f".tmp.{os.getpid()}.npz"  # np.savez appends .npz otherwise
+    np.savez(tmp, **flat)
+    os.replace(tmp, shard)
+    # the torn-checkpoint window: shard committed, manifest not
+    fault_point("ckpt_commit", step)
     if process_index == 0:
         # commit record: written after process 0's own shard.  Other
         # processes' shards are validated at restore time (restore_sharded
@@ -214,11 +235,26 @@ def gc_checkpoints(base_dir: str, keep_last_k: int,
                    if s not in protected)
     doomed = steps[:-keep_last_k]
     for s in doomed:
-        shutil.rmtree(step_dir(base_dir, s), ignore_errors=True)
+        d = step_dir(base_dir, s)
+        # crash-consistent prune order: drop the commit record FIRST, so
+        # a GC killed mid-rmtree leaves a directory latest_step already
+        # ignores — never a half-deleted "complete" checkpoint
+        try:
+            os.unlink(os.path.join(d, "manifest.json"))
+        except OSError:
+            pass
+        fault_point("gc", s)
+        shutil.rmtree(d, ignore_errors=True)
     return doomed
 
 
 def _complete_steps(base_dir: str):
+    """Yield ``(step, manifest)`` for every COMMITTED checkpoint: a
+    parseable manifest commit record plus every shard file it names.  A
+    torn directory — killed mid-commit before the manifest, a truncated
+    or garbage manifest, a missing shard — is skipped, never raised on:
+    the max-step scan must keep working right after a crash, because
+    that is exactly when it runs."""
     if not os.path.isdir(base_dir):
         return
     for name in sorted(os.listdir(base_dir)):
@@ -228,11 +264,15 @@ def _complete_steps(base_dir: str):
         d = os.path.join(base_dir, name)
         mp = os.path.join(d, "manifest.json")
         if not os.path.exists(mp):
-            continue
-        with open(mp) as f:
-            manifest = json.load(f)
+            continue  # no commit record: torn save (or mid-GC prune)
+        try:
+            with open(mp) as f:
+                manifest = json.load(f)
+            n_procs = int(manifest["process_count"])
+        except (ValueError, KeyError, OSError):
+            continue  # unreadable/garbage commit record: torn checkpoint
         if all(os.path.exists(os.path.join(d, _shard_name(p)))
-               for p in range(manifest["process_count"])):
+               for p in range(n_procs)):
             yield int(m.group(1)), manifest
 
 
@@ -366,27 +406,26 @@ class AsyncCheckpointer:
         return False
 
 
-def restore(path: str, like):
-    """Restore into the structure of ``like`` (a pytree template).
+def leaf_key(path) -> str:
+    """The flattened-pytree key a tree path maps to in the npz layout —
+    the ONE spelling shared by save (``_flatten``), restore, the
+    rollback journal, and the reshard layer."""
+    return "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                    for q in path)
 
-    Leaves saved as cross-process sub-shards are reassembled into a
-    full-shape buffer holding THIS process's slices at their recorded
-    offsets; regions owned by other processes stay zero and are never
-    read — committing the result onto the checkpoint's sharding
-    (``StepRunner.place_state`` / ``device_put``) takes only the local
-    slices."""
-    if not path.endswith(".npz"):
-        path = path + ".npz"
-    data = np.load(path)
-    subs = {}
-    sj = re.sub(r"\.npz$", ".subshards.json", path)
-    if os.path.exists(sj):
-        with open(sj) as f:
-            subs = json.load(f)
+
+def reassemble_tree(data, subs, like):
+    """Rebuild the pytree of ``like`` from a flat ``{key: array}``
+    mapping (an ``NpzFile`` or plain dict) plus a sub-shard offsets
+    manifest.  Sub-sharded leaves come back as full-shape HOST buffers
+    holding the stored slices at their recorded offsets; regions not
+    covered stay zero and are never read — committing the result onto
+    a cross-process sharding (``StepRunner.place_state`` /
+    ``make_array_from_callback``) takes only the local slices."""
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat_like:
-        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+        key = leaf_key(p)
         if key in subs:
             rec = subs[key]
             assert tuple(rec["global_shape"]) == tuple(leaf.shape), (
@@ -411,3 +450,17 @@ def restore(path: str, like):
         leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a pytree template) from
+    one shard file; sub-shard handling per :func:`reassemble_tree`."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    subs = {}
+    sj = re.sub(r"\.npz$", ".subshards.json", path)
+    if os.path.exists(sj):
+        with open(sj) as f:
+            subs = json.load(f)
+    return reassemble_tree(data, subs, like)

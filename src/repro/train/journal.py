@@ -1,0 +1,132 @@
+"""Every-step in-memory rollback journal.
+
+Checkpoints bound the damage of a *permanent* failure to the checkpoint
+interval; the journal bounds the damage of a *transient* one (a flaky
+step, a preempted-and-rescheduled worker) to a single step.  Each host
+keeps the last-``k`` full optimizer-state snapshots plus the matching
+data-pipeline cursor, recorded right after every step completes, so
+recovery replays from the previous step without reading a disk
+checkpoint — the in-memory-redundancy technique the fault-tolerance
+survey (arXiv 2407.20018) credits with turning preemptions into
+seconds-long blips.
+
+Snapshots are FULL copies, not deltas: float state is updated as
+``s' = f(s)`` and re-applying a stored ``s' - s`` to anything is not
+bit-exact, while a full snapshot restores the identical trajectory.
+
+Two backings, same API:
+
+* ``dir=None`` (default): a host-RAM deque of flattened snapshots.
+  Recovers in-process (``REPRO_FAULT_MODE=raise`` faults,
+  ``TrainLoop``'s rollback path) — nothing ever touches a filesystem.
+
+* ``dir=...``: a ring of standard sharded checkpoints (the
+  ``train/checkpoint.py`` layout) under ``dir``.  Point it at tmpfs
+  (``/dev/shm/...``) and the snapshots live in host memory yet SURVIVE
+  the process: a worker killed outright (``os._exit``, OOM-kill,
+  preemption) restarts and resumes from the journal via the ordinary
+  ``resume()``/``resume_resharded()`` path — same manifest, same
+  sub-shard sidecars, so it even reshards onto a different topology.
+
+The journal records per-host state only; it composes with — never
+replaces — the durable checkpoint directory.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.train import checkpoint as ckpt
+
+__all__ = ["RollbackJournal"]
+
+
+class RollbackJournal:
+    """Last-``k`` ring of post-step state snapshots (module docstring).
+
+    ``record(state, step, pipeline_state)`` snapshots device state to
+    host — it must run before the next step is dispatched, because
+    donation reuses the state buffers in place.  ``restore(like)``
+    rebuilds the newest (or a given) entry into the structure of
+    ``like``; the caller re-places it on the device layout
+    (``StepRunner.place_state``) and re-aims the pipeline.
+    """
+
+    def __init__(self, k: int = 2, *, dir: Optional[str] = None,
+                 process_index: int = 0, process_count: int = 1):
+        if k < 1:
+            raise ValueError(f"journal depth k must be >= 1, got {k}")
+        self.k = k
+        self.dir = dir
+        self.process_index = process_index
+        self.process_count = process_count
+        self.n_recorded = 0
+        self._mem: "collections.deque" = collections.deque(maxlen=k)
+
+    # -- write -------------------------------------------------------------
+
+    def record(self, state, step: int,
+               pipeline_state: Optional[Any] = None) -> None:
+        """Snapshot ``state`` as the post-step-``step`` entry (i.e. the
+        entry a rollback RESUMES AT, matching checkpoint numbering)."""
+        if pipeline_state is not None and hasattr(pipeline_state, "to_json"):
+            pipeline_state = pipeline_state.to_json()
+        if self.dir is not None:
+            ckpt.save_sharded(self.dir, state, step=step,
+                              process_index=self.process_index,
+                              process_count=self.process_count,
+                              pipeline_state=pipeline_state,
+                              keep_last_k=self.k)
+            self.n_recorded += 1
+            return
+        host = jax.tree_util.tree_map(ckpt._host_leaf, state)
+        flat, subs = ckpt._flatten(host)
+        self._mem.append((int(step), flat, subs, pipeline_state))
+        self.n_recorded += 1
+
+    # -- read --------------------------------------------------------------
+
+    def latest(self) -> Optional[int]:
+        """Newest recorded step, or None when the journal is empty."""
+        if self.dir is not None:
+            return ckpt.latest_step(self.dir)
+        return self._mem[-1][0] if self._mem else None
+
+    def steps(self) -> Tuple[int, ...]:
+        if self.dir is not None:
+            return tuple(s for s, _ in ckpt._complete_steps(self.dir))
+        return tuple(s for s, _, _, _ in self._mem)
+
+    def restore(self, like, *, step: Optional[int] = None
+                ) -> Tuple[Any, Optional[Dict[str, Any]], int]:
+        """Rebuild entry ``step`` (default: newest) into the structure
+        of ``like``.  Returns ``(tree, pipeline_state_dict, step)``."""
+        if self.dir is not None:
+            tree, pstate, manifest = ckpt.restore_sharded(
+                self.dir, like, step=step,
+                process_index=self.process_index)
+            return tree, pstate, int(manifest["step"])
+        for s, flat, subs, pstate in reversed(self._mem):
+            if step is None or s == step:
+                return ckpt.reassemble_tree(flat, subs, like), pstate, s
+        raise LookupError(
+            f"journal has no entry for step {step} "
+            f"(held: {self.steps()})")
+
+    def __len__(self) -> int:
+        return len(self.steps())
+
+    def clear(self) -> None:
+        self._mem.clear()
+        if self.dir is not None:
+            for s, _ in list(ckpt._complete_steps(self.dir)):
+                d = ckpt.step_dir(self.dir, s)
+                try:  # same crash-consistent order as gc_checkpoints
+                    os.unlink(os.path.join(d, "manifest.json"))
+                except OSError:
+                    pass
+                shutil.rmtree(d, ignore_errors=True)

@@ -33,12 +33,13 @@ from repro.configs.base import RunConfig
 from repro.data.device_prefetch import DevicePrefetch
 from repro.models.model import Model
 from repro.train import checkpoint as ckpt
+from repro.train.faults import TransientWorkerError, fault_point
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import (batch_shardings, init_state,
                                     make_train_step, state_shardings)
 
 __all__ = ["StepRunner", "TrainLoop", "TrainerLog", "AsyncMetrics",
-           "resume", "DEFAULT_PEAK_FLOPS"]
+           "resume", "resume_resharded", "DEFAULT_PEAK_FLOPS"]
 
 # TPU v5e peak (matches analysis.roofline defaults); override per hardware
 DEFAULT_PEAK_FLOPS = 197e12
@@ -454,11 +455,22 @@ class TrainLoop:
                  async_checkpoint: bool = True, device_prefetch: bool = True,
                  prefetch_size: int = 2, aot_compile: bool = True,
                  metrics_lag: int = 8,
+                 journal=None, max_rollbacks: int = 2,
                  peak_flops: float = DEFAULT_PEAK_FLOPS):
         """``pin_steps`` lists checkpoint steps ``keep_last_k`` GC must
         never prune — the resume path pins the ``--ckpt-step`` it
         restored from, so the operator's rollback point survives
-        subsequent saves (see docs/resume.md)."""
+        subsequent saves (see docs/resume.md).
+
+        ``journal`` is an optional
+        :class:`repro.train.journal.RollbackJournal`: the loop records
+        every completed step into it, and a
+        :class:`~repro.train.faults.TransientWorkerError` raised during
+        a step (an injected fault, or a caller-detected flaky step)
+        rolls state + data cursor back to the newest journal entry and
+        replays — no disk checkpoint is read.  At most ``max_rollbacks``
+        recoveries per ``run()``; past that the error propagates (a
+        'transient' fault that keeps firing isn't transient)."""
         if ckpt_path and ckpt_dir:
             raise ValueError("pass ckpt_path (flat) or ckpt_dir (sharded), "
                              "not both")
@@ -475,6 +487,8 @@ class TrainLoop:
         self.prefetch_size = prefetch_size
         self.aot_compile = aot_compile
         self.metrics_lag = metrics_lag
+        self.journal = journal
+        self.max_rollbacks = max_rollbacks
         self.peak_flops = peak_flops
 
     def run(self, data: Iterable[Dict[str, Any]], steps: int, *,
@@ -558,57 +572,102 @@ class TrainLoop:
             else:
                 ckpt.save(self.ckpt_path, st, step=step_no)
 
+        rollbacks = 0
         try:
             t_iter = time.perf_counter()
-            for i in range(start_step, steps):
-                tw = time.perf_counter()
-                batch = next(it)
-                blocked += time.perf_counter() - tw
-
-                if i == start_step:
-                    if tokens_per_step is None:
-                        tok = batch["tokens"]
-                        tokens_per_step = int(tok.shape[0] * tok.shape[1])
-                    if self.aot_compile and runner.compiled is None:
-                        runner.compile(state, batch)
-
-                state, metrics = runner(state, batch)
-
-                now = time.perf_counter()
-                dt = now - t_iter
-                t_iter = now
-                if i > start_step:  # first iteration is dominated by compile
-                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
-
-                if (i + 1) % self.log_every == 0 or i == start_step \
-                        or i == steps - 1:
-                    n = i - last_logged
-                    window = max(now - t_last_log, 1e-9)
-                    bsz = batch["tokens"].shape[0]
-                    step_t = ema if ema is not None else dt
-                    meta = {
-                        "step": i + 1,
-                        "samples_per_s": n * bsz / window,
-                        "tokens_per_s": n * tokens_per_step / window,
-                        "step_time_ema": step_t,
-                        "mfu": runner.mfu(step_t, tokens_per_step,
-                                          self.peak_flops),
-                    }
-                    async_metrics.push(meta, metrics)
-                    last_logged = i
-                    t_last_log = now
-                    # poll may force-resolve past the lag window, which
-                    # blocks on the device — account it as stall time
+            i = start_step
+            while i < steps:
+                try:
                     tw = time.perf_counter()
-                    resolve_into_log(async_metrics.poll())
+                    batch = next(it)
                     blocked += time.perf_counter() - tw
 
-                if (self.ckpt_path or self.ckpt_dir) and self.ckpt_every \
-                        and (i + 1) % self.ckpt_every == 0:
-                    tw = time.perf_counter()
-                    write_ckpt(state, i + 1)
-                    blocked += time.perf_counter() - tw
-                    last_saved = i + 1
+                    if i == start_step:
+                        if tokens_per_step is None:
+                            tok = batch["tokens"]
+                            tokens_per_step = int(tok.shape[0]
+                                                  * tok.shape[1])
+                        if self.aot_compile and runner.compiled is None:
+                            runner.compile(state, batch)
+
+                    state, metrics = runner(state, batch)
+                    # the host-kill window: step i dispatched, device
+                    # possibly still mid-backward
+                    fault_point("step", i)
+
+                    now = time.perf_counter()
+                    dt = now - t_iter
+                    t_iter = now
+                    if i > start_step:  # first iter is dominated by compile
+                        ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+
+                    if (i + 1) % self.log_every == 0 or i == start_step \
+                            or i == steps - 1:
+                        n = i - last_logged
+                        window = max(now - t_last_log, 1e-9)
+                        bsz = batch["tokens"].shape[0]
+                        step_t = ema if ema is not None else dt
+                        meta = {
+                            "step": i + 1,
+                            "samples_per_s": n * bsz / window,
+                            "tokens_per_s": n * tokens_per_step / window,
+                            "step_time_ema": step_t,
+                            "mfu": runner.mfu(step_t, tokens_per_step,
+                                              self.peak_flops),
+                        }
+                        async_metrics.push(meta, metrics)
+                        last_logged = i
+                        t_last_log = now
+                        # poll may force-resolve past the lag window, which
+                        # blocks on the device — account it as stall time
+                        tw = time.perf_counter()
+                        resolve_into_log(async_metrics.poll())
+                        blocked += time.perf_counter() - tw
+
+                    if self.journal is not None:
+                        # device->host snapshot of the completed step —
+                        # must happen before the next dispatch reuses the
+                        # donated buffers; the sync is the price of
+                        # single-step rollback granularity
+                        tw = time.perf_counter()
+                        self.journal.record(
+                            state, i + 1,
+                            pipeline.state_at(i + 1)
+                            if pipeline is not None else None)
+                        blocked += time.perf_counter() - tw
+
+                    if (self.ckpt_path or self.ckpt_dir) and self.ckpt_every \
+                            and (i + 1) % self.ckpt_every == 0:
+                        tw = time.perf_counter()
+                        write_ckpt(state, i + 1)
+                        blocked += time.perf_counter() - tw
+                        last_saved = i + 1
+                except TransientWorkerError:
+                    if self.journal is None or pipeline is None \
+                            or self.journal.latest() is None \
+                            or rollbacks >= self.max_rollbacks:
+                        raise
+                    rollbacks += 1
+                    from repro.train.train_step import abstract_state
+
+                    like = abstract_state(runner.model, runner.run)
+                    tree, jpstate, jstep = self.journal.restore(like)
+                    state = runner.place_state(tree)
+                    # the old loader may have prefetched past the fault;
+                    # stop it and re-aim a fresh one at the journal entry
+                    if pipeline_loader is not None:
+                        pipeline_loader.stop()
+                    pipeline.restore(jpstate if jpstate is not None
+                                     else pipeline.state_at(jstep))
+                    if self.device_prefetch:
+                        it = pipeline.device_batches(runner.batch_shardings)
+                    else:
+                        it = iter(pipeline.host_batches())
+                    pipeline_loader = pipeline.last_loader
+                    i = jstep
+                    t_iter = time.perf_counter()
+                    continue
+                i += 1
 
             tw = time.perf_counter()
             resolve_into_log(async_metrics.drain())
@@ -641,6 +700,10 @@ class TrainLoop:
                             / max(total, 1e-9),
             "n_traces": runner.n_traces,
             "forced_metric_resolves": async_metrics.forced_resolves,
+            # rollback-journal recovery telemetry (0 without a journal)
+            "rollbacks": rollbacks,
+            "journal_records": self.journal.n_recorded
+                               if self.journal is not None else 0,
             # per-bucket comm volume rides with the MFU/stall telemetry so
             # the grad_overlap benchmark (and operators) can attribute
             # step-time differences to communication
@@ -683,4 +746,33 @@ def resume(ckpt_dir: str, runner: StepRunner, *,
             raise ValueError(
                 f"checkpoint step {manifest['step']} has no pipeline state")
         pipeline.restore(pstate)
+    return runner.place_state(state), manifest["step"]
+
+
+def resume_resharded(ckpt_dir: str, runner: StepRunner, *,
+                     pipeline=None, step: Optional[int] = None):
+    """Elastic :func:`resume`: restore a checkpoint written by ANY
+    number of processes onto this runner's topology and plan.
+
+    Target regions come from ``runner.state_shardings`` (the
+    ``ParallelPlan`` made concrete on the current mesh), so each process
+    reads only the stored sub-shards overlapping its new shards — see
+    :mod:`repro.distributed.reshard`.  The pipeline is re-aimed
+    elastically (global position; the global batch must be unchanged).
+    Works on the plain same-topology case too, so ``--elastic-restore``
+    is safe to leave on.
+
+    Returns ``(state, start_step)`` like :func:`resume`.
+    """
+    from repro.distributed.reshard import restore_resharded
+    from repro.train.train_step import abstract_state
+
+    like = abstract_state(runner.model, runner.run)
+    state, pstate, manifest = restore_resharded(
+        ckpt_dir, like, step=step, shardings=runner.state_shardings)
+    if pipeline is not None:
+        if pstate is None:
+            raise ValueError(
+                f"checkpoint step {manifest['step']} has no pipeline state")
+        pipeline.restore(pstate, elastic=True)
     return runner.place_state(state), manifest["step"]

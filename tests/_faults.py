@@ -1,0 +1,153 @@
+"""Reusable fault-injection harness for crash/recovery tests.
+
+The product side is :mod:`repro.train.faults`: named fault points
+(``step``, ``ckpt_commit``, ``gc``) that kill — or raise inside — a
+process when the ``REPRO_FAULT_*`` environment arms them.  This module
+is the test side: spawn workers (single, or N real ``jax.distributed``
+processes), arm a fault for a chosen worker/step/phase, assert the
+injected death (exit code ``FAULT_EXIT_CODE``, never confusable with a
+real crash), then restart and assert recovery.
+
+Shared by ``test_multihost_resume.py``, ``test_subshard_ckpt.py`` and
+``test_reshard.py`` — any new multi-process test should build on
+:func:`run_one` / :func:`run_workers` instead of hand-rolling Popen
+pairs.
+
+Kill logs: every armed fault writes (and fire-onces on) a one-line
+``phase=... step=... pid=... mode=...`` file.  :func:`read_kill_log`
+parses it, and when ``REPRO_FAULT_LOGDIR`` is exported (the CI
+``elastic-restore`` job does) also copies it there so the artifact
+upload preserves exactly where each injected failure fired.
+"""
+import os
+import shutil
+import socket
+import subprocess
+import sys
+import textwrap
+from typing import Dict, List, Optional, Sequence, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# mirrors repro.train.faults.FAULT_EXIT_CODE without importing jax here
+FAULT_EXIT_CODE = 117
+
+
+def free_port() -> int:
+    s = socket.socket()
+    s.bind(("localhost", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def fault_env(phase: str, *, step: Optional[int] = None,
+              mode: str = "exit", log: Optional[str] = None
+              ) -> Dict[str, str]:
+    """The env fragment arming fault point ``phase`` (at ``step``, or
+    its first hit).  Pass a ``log`` path for fire-once semantics — a
+    restarted worker inheriting the same environment must not die at
+    the same point twice."""
+    env = {"REPRO_FAULT_PHASE": phase, "REPRO_FAULT_MODE": mode}
+    if step is not None:
+        env["REPRO_FAULT_STEP"] = str(step)
+    if log is not None:
+        env["REPRO_FAULT_LOG"] = log
+    return env
+
+
+def read_kill_log(log: str) -> Dict[str, str]:
+    """Parse a fault point's kill-log line into a dict; also publishes
+    a copy under ``$REPRO_FAULT_LOGDIR`` (CI artifact dir) when set."""
+    with open(log) as f:
+        line = f.read().strip()
+    logdir = os.environ.get("REPRO_FAULT_LOGDIR")
+    if logdir:
+        os.makedirs(logdir, exist_ok=True)
+        shutil.copy(log, os.path.join(
+            logdir, f"kill-{os.path.basename(log)}-{os.getpid()}.log"))
+    return dict(kv.split("=", 1) for kv in line.split())
+
+
+def _base_env(extra_env: Optional[Dict[str, str]],
+              n_devices: Optional[int]) -> Dict[str, str]:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    if n_devices is not None:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n_devices}"
+    if extra_env:
+        env.update(extra_env)
+    return env
+
+
+def run_one(body: str, *, extra_env: Optional[Dict[str, str]] = None,
+            argv: Sequence[str] = (), n_devices: Optional[int] = None,
+            timeout: int = 600, expect_exit: int = 0) -> str:
+    """Run ``body`` in a fresh interpreter; assert it exits with
+    ``expect_exit`` (pass ``FAULT_EXIT_CODE`` when a fault is armed to
+    kill it).  Returns stdout."""
+    env = _base_env(extra_env, n_devices)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body), *map(str, argv)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == expect_exit, (
+        f"exit {out.returncode}, wanted {expect_exit}\n"
+        f"--- stdout ---\n{out.stdout[-2000:]}\n"
+        f"--- stderr ---\n{out.stderr[-3000:]}")
+    return out.stdout
+
+
+def run_workers(body: str, n_procs: int, *,
+                extra_env: Optional[Dict[str, str]] = None,
+                per_proc_env: Optional[Dict[int, Dict[str, str]]] = None,
+                n_devices_per_proc: int = 1, timeout: int = 600,
+                expect_exit: Optional[Dict[int, int]] = None,
+                port: Optional[int] = None) -> List[Tuple[int, str, str]]:
+    """Spawn ``n_procs`` real multi-controller workers running ``body``.
+
+    Each worker gets the coordinator env
+    (``REPRO_COORDINATOR``/``REPRO_NUM_PROCESSES``/``REPRO_PROCESS_ID``)
+    that ``repro.distributed.maybe_initialize_distributed`` consumes, so
+    a body's first lines are just ``from repro.distributed import
+    maybe_initialize_distributed; maybe_initialize_distributed()`` —
+    the exact product path the launcher uses.  The worker index also
+    rides in ``sys.argv[1]``.
+
+    ``expect_exit`` maps worker index -> required exit code (default 0)
+    — e.g. ``{1: FAULT_EXIT_CODE}`` when worker 1 is armed to die.
+    ``per_proc_env`` layers worker-specific vars (arm a fault on ONE
+    worker) over ``extra_env``.  Returns ``[(rc, stdout, stderr)]`` in
+    worker order, after asserting every exit code.
+    """
+    if port is None:
+        port = free_port()
+    procs = []
+    for pid in range(n_procs):
+        env = _base_env(extra_env, n_devices_per_proc)
+        env["REPRO_COORDINATOR"] = f"localhost:{port}"
+        env["REPRO_NUM_PROCESSES"] = str(n_procs)
+        env["REPRO_PROCESS_ID"] = str(pid)
+        if per_proc_env and pid in per_proc_env:
+            env.update(per_proc_env[pid])
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", textwrap.dedent(body), str(pid)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True))
+    outs = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=timeout)
+            outs.append((p.returncode, out, err))
+    except subprocess.TimeoutExpired:
+        for q in procs:
+            q.kill()
+        raise
+    for pid, (rc, out, err) in enumerate(outs):
+        want = (expect_exit or {}).get(pid, 0)
+        assert rc == want, (
+            f"worker {pid}: exit {rc}, wanted {want}\n"
+            f"--- stdout ---\n{out[-2000:]}\n"
+            f"--- stderr ---\n{err[-3000:]}")
+    return outs

@@ -2,23 +2,25 @@
 uninterrupted run's loss sequence exactly, with each process writing —
 and reading — only its own checkpoint shard.
 
-Two subprocesses (fresh jax each, like test_multidevice):
-  phase 1: both hosts train 0->6 uninterrupted (recording losses), then a
-           fresh 0->3 run checkpoints per-host shards and "dies".
-  phase 2: a new process resumes each host from ONLY its own shard (host
-           0 is resumed while host 1's shard is hidden, proving read
-           isolation) and runs 3->6; the concatenated per-host loss
-           sequences must equal phase 1's bit for bit.
+Subprocesses (fresh jax each) via the shared ``tests/_faults.py``
+harness:
+  reference: both hosts train 0->6 uninterrupted, recording losses.
+  killed:    each host trains with per-step checkpoints and an ARMED
+             ``step`` fault — the process genuinely dies (``os._exit``,
+             exit code ``FAULT_EXIT_CODE``) right after dispatching step
+             HALF, before that step's checkpoint exists.
+  resume:    a new process resumes each host from ONLY its own shard of
+             the last COMPLETE checkpoint (host 0 is resumed while host
+             1's shard is hidden, proving read isolation) and runs to 6;
+             the concatenated per-host loss sequences must equal the
+             reference bit for bit.
 """
 import json
 import os
-import subprocess
-import sys
-import textwrap
 
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _faults import FAULT_EXIT_CODE, fault_env, read_kill_log, run_one
 
 COMMON = """
     import dataclasses, json, os, sys
@@ -62,7 +64,7 @@ COMMON = """
     CK = os.path.join(TMP, "ck")
 """
 
-PHASE1 = COMMON + """
+REFERENCE = COMMON + """
     # uninterrupted reference, both hosts
     ref = {}
     for pidx in (0, 1):
@@ -73,19 +75,23 @@ PHASE1 = COMMON + """
     assert ref["0"] != ref["1"], "hosts must see different data slices"
     with open(os.path.join(TMP, "ref.json"), "w") as f:
         json.dump(ref, f)
-
-    # interrupted run: train to HALF, checkpoint per-host shard, "die"
-    for pidx in (0, 1):
-        p = make_pipe(pidx)
-        loop = TrainLoop(make_runner(), log_every=1, ckpt_dir=CK,
-                         process_index=pidx, process_count=2)
-        _, log = loop.run(p, HALF, seed=0)
-        p.close()
-        assert [m["loss"] for m in log.metrics] == ref[str(pidx)][:HALF]
-    print("phase1 OK")
+    print("reference OK")
 """
 
-PHASE2 = COMMON + """
+KILLED = COMMON + """
+    # per-step sync checkpoints; the armed `step` fault kills this
+    # process right after dispatching step HALF — before step HALF+1's
+    # checkpoint exists, so the last complete one is step HALF
+    pidx = int(sys.argv[1])
+    p = make_pipe(pidx)
+    loop = TrainLoop(make_runner(), log_every=1, ckpt_dir=CK,
+                     ckpt_every=1, async_checkpoint=False,
+                     process_index=pidx, process_count=2)
+    loop.run(p, STEPS, seed=0)
+    raise SystemExit("fault point did not fire")
+"""
+
+RESUME = COMMON + """
     with open(os.path.join(TMP, "ref.json")) as f:
         ref = json.load(f)
 
@@ -111,34 +117,33 @@ PHASE2 = COMMON + """
         assert steps == list(range(HALF + 1, STEPS + 1)), steps
         assert losses == ref[str(pidx)][HALF:], (
             pidx, losses, ref[str(pidx)][HALF:])
-    print("phase2 OK")
+    print("resume OK")
 """
-
-
-def _run(body: str, tmp: str):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env["JAX_PLATFORMS"] = "cpu"
-    env["RESUME_TMP"] = tmp
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
-                         env=env, capture_output=True, text=True,
-                         timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
 
 
 @pytest.mark.slow
 def test_two_process_killed_and_resumed_run_is_exact(tmp_path):
     tmp = str(tmp_path)
-    assert "phase1 OK" in _run(PHASE1, tmp)
+    env = {"RESUME_TMP": tmp}
+    assert "reference OK" in run_one(REFERENCE, extra_env=env)
 
+    # kill each host's run mid-step via the armed fault point
+    for pidx in (0, 1):
+        log = os.path.join(tmp, f"kill-{pidx}.log")
+        run_one(KILLED, argv=[pidx], expect_exit=FAULT_EXIT_CODE,
+                extra_env={**env, **fault_env("step", step=3, log=log)})
+        rec = read_kill_log(log)
+        assert rec["phase"] == "step" and rec["step"] == "3"
+
+    # the kill landed between checkpoint 3 and 4: 3 is the last complete
     half_dir = os.path.join(tmp, "ck", "ckpt-00000003")
-    files = sorted(os.listdir(half_dir))
+    files = sorted(f for f in os.listdir(half_dir)
+                   if not f.endswith(".hidden"))
     assert files == ["manifest.json", "shard-00000.npz",
                      "shard-00000.pipeline.json", "shard-00001.npz",
                      "shard-00001.pipeline.json"], files
     with open(os.path.join(half_dir, "manifest.json")) as f:
         assert json.load(f)["process_count"] == 2
 
-    # the "kill": phase 2 is a brand-new process that only has the shards
-    assert "phase2 OK" in _run(PHASE2, tmp)
+    # resume is a brand-new process that only has the shards
+    assert "resume OK" in run_one(RESUME, extra_env=env)

@@ -264,6 +264,155 @@ def test_noop_resume_does_not_rewrite_checkpoint(setup):
     assert log.steps == [] and sorted(os.listdir(ck)) == before
 
 
+# ---------------------------------------------------------------------------
+# torn manifests, mid-GC kills, rollback journal
+# ---------------------------------------------------------------------------
+
+
+def test_latest_step_skips_torn_or_garbage_manifest(tmp_path):
+    """A crash between manifest.json open and flush can leave an empty
+    or truncated file; it must read as 'not committed', never raise."""
+    base = str(tmp_path / "ck")
+    ckpt.save_sharded(base, tree(), step=3)
+    for s, payload in ((5, ""), (7, '{"step": 7'), (9, '{"format": 1}')):
+        d = ckpt.step_dir(base, s)
+        os.makedirs(d)
+        open(os.path.join(d, "shard-00000.npz"), "wb").close()
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            f.write(payload)
+    assert ckpt.latest_step(base) == 3
+    _, _, manifest = ckpt.restore_sharded(base, tree())
+    assert manifest["step"] == 3
+    # GC looks straight past them too (and must not delete them: they
+    # may be a concurrent writer's half-committed step)
+    assert ckpt.gc_checkpoints(base, keep_last_k=1) == []
+    assert os.path.isdir(ckpt.step_dir(base, 7))
+
+
+def test_kill_mid_gc_leaves_no_visible_half_deleted_ckpt(
+        tmp_path, monkeypatch):
+    """GC unlinks the manifest FIRST, so a kill mid-``rmtree`` leaves a
+    directory ``latest_step`` already ignores; a rerun finishes the
+    prune."""
+    from repro.train.faults import TransientWorkerError
+
+    base = str(tmp_path / "ck")
+    for s in (2, 4, 6, 8):
+        ckpt.save_sharded(base, tree(), step=s)
+    monkeypatch.setenv("REPRO_FAULT_PHASE", "gc")
+    monkeypatch.setenv("REPRO_FAULT_STEP", "2")
+    monkeypatch.setenv("REPRO_FAULT_MODE", "raise")
+    monkeypatch.setenv("REPRO_FAULT_LOG", str(tmp_path / "kill.log"))
+    with pytest.raises(TransientWorkerError):
+        ckpt.gc_checkpoints(base, keep_last_k=2)
+    # died between manifest unlink and rmtree: dir remains, invisible
+    d2 = ckpt.step_dir(base, 2)
+    assert os.path.isdir(d2)
+    assert not os.path.exists(os.path.join(d2, "manifest.json"))
+    assert ckpt.latest_step(base) == 8
+    assert [s for s, _ in ckpt._complete_steps(base)] == [4, 6, 8]
+    # the fire-once kill log disarms the fault: a rerun completes
+    assert ckpt.gc_checkpoints(base, keep_last_k=2) == [4]
+    assert [s for s, _ in ckpt._complete_steps(base)] == [6, 8]
+
+
+def test_rollback_journal_memory_ring():
+    from repro.train.journal import RollbackJournal
+
+    with pytest.raises(ValueError):
+        RollbackJournal(0)
+    j = RollbackJournal(2)
+    assert j.latest() is None and len(j) == 0
+    for s in (1, 2, 3):
+        j.record({"w": np.full(3, float(s), np.float32)}, s,
+                 pipeline_state={"global_step": s})
+    assert j.steps() == (2, 3) and j.latest() == 3  # k=2 ring
+    like = {"w": jax.ShapeDtypeStruct((3,), np.float32)}
+    got, pstate, step = j.restore(like, step=2)
+    assert step == 2 and pstate == {"global_step": 2}
+    np.testing.assert_array_equal(got["w"], np.full(3, 2.0))
+    got, _, step = j.restore(like)  # default: newest
+    assert step == 3
+    np.testing.assert_array_equal(got["w"], np.full(3, 3.0))
+    with pytest.raises(LookupError):
+        j.restore(like, step=1)  # rolled out of the ring
+    assert j.n_recorded == 3
+    j.clear()
+    assert j.latest() is None
+
+
+def test_rollback_journal_dir_ring(tmp_path):
+    """dir-backed journal = a keep-last-k ring of ordinary sharded
+    checkpoints: restorable via the standard path, prunable, clearable."""
+    from repro.train.journal import RollbackJournal
+
+    jd = str(tmp_path / "journal")
+    j = RollbackJournal(2, dir=jd)
+    for s in (1, 2, 3):
+        j.record({"w": np.full(3, float(s), np.float32)}, s,
+                 pipeline_state={"global_step": s})
+    assert j.steps() == (2, 3)  # ring pruned on record
+    like = {"w": jax.ShapeDtypeStruct((3,), np.float32)}
+    got, pstate, step = j.restore(like)
+    assert step == 3 and pstate == {"global_step": 3}
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.full(3, 3.0))
+    # a journal entry IS a checkpoint: the plain restore path reads it
+    got2, _, manifest = ckpt.restore_sharded(
+        jd, {"w": np.zeros(3, np.float32)})
+    assert manifest["step"] == 3
+    j.clear()
+    assert j.latest() is None and ckpt.latest_step(jd) is None
+
+
+@pytest.mark.slow
+def test_transient_fault_rolls_back_from_journal(setup, monkeypatch):
+    """A TransientWorkerError mid-run (armed ``step`` fault,
+    mode=raise) rolls state + data cursor back to the newest in-memory
+    journal entry and replays, reproducing the uninterrupted loss
+    trajectory exactly — with no checkpoint directory at all."""
+    from repro.train.journal import RollbackJournal
+
+    make_pipe, make_runner = setup["make_pipe"], setup["make_runner"]
+    p = make_pipe()
+    _, ref = TrainLoop(make_runner(), log_every=1).run(p, STEPS, seed=0)
+    p.close()
+
+    monkeypatch.setenv("REPRO_FAULT_PHASE", "step")
+    monkeypatch.setenv("REPRO_FAULT_STEP", "4")
+    monkeypatch.setenv("REPRO_FAULT_MODE", "raise")
+    monkeypatch.setenv("REPRO_FAULT_LOG",
+                       str(setup["tmp"] / "fault-raise.log"))
+    p2 = make_pipe()
+    _, log_j = TrainLoop(make_runner(), log_every=1,
+                         journal=RollbackJournal(2)).run(p2, STEPS,
+                                                         seed=0)
+    p2.close()
+    assert log_j.telemetry["rollbacks"] == 1
+    # the faulted iteration dies before its record; the replay records
+    assert log_j.telemetry["journal_records"] == STEPS
+    assert log_j.steps == ref.steps
+    assert [m["loss"] for m in log_j.metrics] == \
+        [m["loss"] for m in ref.metrics], "rollback diverged"
+
+
+@pytest.mark.slow
+def test_transient_fault_without_journal_propagates(setup, monkeypatch):
+    from repro.train.faults import TransientWorkerError
+
+    make_pipe, make_runner = setup["make_pipe"], setup["make_runner"]
+    monkeypatch.setenv("REPRO_FAULT_PHASE", "step")
+    monkeypatch.setenv("REPRO_FAULT_STEP", "1")
+    monkeypatch.setenv("REPRO_FAULT_MODE", "raise")
+    monkeypatch.setenv("REPRO_FAULT_LOG",
+                       str(setup["tmp"] / "fault-nojournal.log"))
+    p = make_pipe()
+    try:
+        with pytest.raises(TransientWorkerError):
+            TrainLoop(make_runner(), log_every=1).run(p, 3, seed=0)
+    finally:
+        p.close()
+
+
 @pytest.mark.slow
 def test_resumed_pipeline_serves_the_next_batch(setup):
     """The batch consumed at resumed step s equals the batch the

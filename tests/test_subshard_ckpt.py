@@ -8,31 +8,33 @@ a ``shard-<pidx>.subshards.json`` offset manifest) and restores only its
 addressable region.
 
 This is the 2-process acceptance: REAL ``jax.distributed`` processes
-(CPU collectives), a 4-device mesh spanning both, a state tree mixing
-dim-0-sharded / dim-1-sharded (scan-stacked) / replicated / scalar
-leaves.  Each process saves, restores from ONLY its own files, commits
-the result back onto the same sharding, and asserts every local device
-shard is bit-identical to the original global arrays.
+(CPU collectives) via the shared ``tests/_faults.py`` harness, a
+4-device mesh spanning both, a state tree mixing dim-0-sharded /
+dim-1-sharded (scan-stacked) / replicated / scalar leaves.  Each process
+saves, restores from ONLY its own files, commits the result back onto
+the same sharding, and asserts every local device shard is bit-identical
+to the original global arrays.
+
+A second test arms the ``ckpt_commit`` fault point mid-save: the process
+dies after its shard npz is committed but before the manifest, and the
+torn directory must be invisible to ``latest_step``.
 """
 import json
 import os
-import socket
-import subprocess
-import sys
-import textwrap
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from _faults import (FAULT_EXIT_CODE, fault_env, read_kill_log, run_one,
+                     run_workers)
 
 BODY = """
     import json, os, sys, time
     import numpy as np
     import jax
 
-    PORT = os.environ["SUBSHARD_PORT"]
+    from repro.distributed import maybe_initialize_distributed
+
+    maybe_initialize_distributed()
     PID = int(sys.argv[1])
     TMP = os.environ["SUBSHARD_TMP"]
-    jax.distributed.initialize(coordinator_address=f"localhost:{PORT}",
-                               num_processes=2, process_id=PID)
     assert jax.process_count() == 2
     from jax.sharding import Mesh, NamedSharding
     from jax.sharding import PartitionSpec as P
@@ -97,40 +99,14 @@ BODY = """
 """
 
 
-def _free_port() -> int:
-    s = socket.socket()
-    s.bind(("localhost", 0))
-    port = s.getsockname()[1]
-    s.close()
-    return port
-
-
 def test_two_process_fsdp_subshard_save_restore(tmp_path):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env["SUBSHARD_PORT"] = str(_free_port())
-    env["SUBSHARD_TMP"] = str(tmp_path / "ck")
-    body = textwrap.dedent(BODY)
-    procs = [subprocess.Popen([sys.executable, "-c", body, str(pid)],
-                              env=env, stdout=subprocess.PIPE,
-                              stderr=subprocess.PIPE, text=True)
-             for pid in (0, 1)]
-    outs = []
-    for p in procs:
-        try:
-            out, err = p.communicate(timeout=300)
-        except subprocess.TimeoutExpired:
-            for q in procs:
-                q.kill()
-            raise
-        outs.append((p.returncode, out, err))
-    for rc, out, err in outs:
-        assert rc == 0, err[-3000:]
+    outs = run_workers(
+        BODY, 2, n_devices_per_proc=2, timeout=300,
+        extra_env={"SUBSHARD_TMP": str(tmp_path / "ck")})
+    for _, out, _ in outs:
         assert "subshard save/restore OK" in out
     # the sub-shard sidecar manifests exist and carry slice offsets
-    d = os.path.join(env["SUBSHARD_TMP"], "ckpt-00000003")
+    d = os.path.join(str(tmp_path / "ck"), "ckpt-00000003")
     for pidx in (0, 1):
         sj = os.path.join(d, f"shard-{pidx:05d}.subshards.json")
         assert os.path.exists(sj), sj
@@ -145,3 +121,37 @@ def test_two_process_fsdp_subshard_save_restore(tmp_path):
         starts = sorted(p["start"][0] for p in subs["w"]["parts"])
         # 4-way sharding over 2 processes: this host owns 2 of 4 slices
         assert len(starts) == 2 and all(s % 4 == 0 for s in starts)
+
+
+TORN_BODY = """
+    import os, sys
+    import numpy as np
+
+    from repro.train import checkpoint as ckpt
+
+    TMP = os.environ["SUBSHARD_TMP"]
+    state = {"w": np.arange(12.0).reshape(3, 4).astype(np.float32)}
+    # a committed earlier step the torn save must not shadow
+    ckpt.save_sharded(TMP, state, step=2)
+    assert ckpt.latest_step(TMP) == 2
+    # armed ckpt_commit fault: dies after shard npz, before manifest
+    ckpt.save_sharded(TMP, state, step=5)
+    raise SystemExit("fault point did not fire")
+"""
+
+
+def test_kill_mid_commit_leaves_no_torn_latest(tmp_path):
+    log = str(tmp_path / "kill.log")
+    run_one(TORN_BODY, timeout=120, expect_exit=FAULT_EXIT_CODE,
+            extra_env={"SUBSHARD_TMP": str(tmp_path / "ck"),
+                       **fault_env("ckpt_commit", step=5, log=log)})
+    rec = read_kill_log(log)
+    assert rec["phase"] == "ckpt_commit" and rec["step"] == "5"
+    # the torn step-5 dir has a shard but no manifest: invisible
+    d5 = os.path.join(str(tmp_path / "ck"), "ckpt-00000005")
+    assert os.path.exists(os.path.join(d5, "shard-00000.npz"))
+    assert not os.path.exists(os.path.join(d5, "manifest.json"))
+
+    from repro.train import checkpoint as ckpt
+
+    assert ckpt.latest_step(str(tmp_path / "ck")) == 2
