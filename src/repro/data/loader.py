@@ -17,6 +17,7 @@ from typing import Callable, Dict, Iterator, Optional
 import numpy as np
 
 from repro.data.cache import StagedDataset
+from repro.observability import get_tracer
 
 
 _SENTINEL = object()  # queued by stop() so a blocked consumer wakes up
@@ -141,10 +142,17 @@ class OrderedPrefetchLoader:
         self.consumer_stalls = 0
 
     def _worker(self, wid: int):
+        # each worker claims its own trace lane so overlapping fetches
+        # render side by side; thread_lane makes spans emitted deeper in
+        # the stack (DataPipeline._batch) land on the same lane
+        lane = f"fetch-w{wid}"
         k = self.start + wid
         try:
             while not self._stop.is_set():
-                batch = self.batch_fn(k)
+                tracer = get_tracer()
+                tracer.thread_lane(lane)
+                with tracer.span("batch_fetch", lane, index=k):
+                    batch = self.batch_fn(k)
                 while not self._stop.is_set():
                     try:
                         self._qs[wid].put(batch, timeout=0.1)

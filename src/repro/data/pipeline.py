@@ -46,6 +46,7 @@ import numpy as np
 from repro.data.cache import NetworkFS, StagedDataset
 from repro.data.device_prefetch import DevicePrefetch
 from repro.data.loader import OrderedPrefetchLoader
+from repro.observability import get_tracer
 from repro.distributed.sharding import (local_batch_size,
                                         process_batch_slice)
 
@@ -154,14 +155,19 @@ class DataPipeline:
         return rows[self._slice]
 
     def _batch(self, global_step: int) -> Dict[str, np.ndarray]:
-        toks, mask = self.ds.gather(self.batch_indices(global_step))
+        # lane=None: spans land on the calling loader worker's lane
+        # (Tracer.thread_lane), nesting under its batch_fetch span
+        tracer = get_tracer()
+        with tracer.span("gather", None, step=global_step):
+            toks, mask = self.ds.gather(self.batch_indices(global_step))
         batch = {"tokens": toks.astype(np.int32),
                  "attn_mask": mask.astype(np.float32)}
         if self.work_fn is not None:
             epoch = global_step // self.batches_per_epoch
             b = global_step % self.batches_per_epoch
             rng = np.random.default_rng([self.seed, epoch, b])
-            batch = self.work_fn(batch, rng)
+            with tracer.span("work_fn", None, step=global_step):
+                batch = self.work_fn(batch, rng)
         return batch
 
     # -- state ------------------------------------------------------------

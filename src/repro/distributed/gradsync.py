@@ -459,3 +459,20 @@ def all_to_all_bytes(total_bytes: int, n_devices: int) -> float:
     if n_devices <= 1:
         return 0.0
     return (n_devices - 1) / n_devices * total_bytes
+
+
+def metric_series(info: dict) -> dict:
+    """Flatten a ``StepRunner.grad_sync_info()`` dict into the named
+    numeric series the metrics registry exports (wire / gather /
+    dispatch bytes, bucket counts, bubble fractions): scalar numbers
+    pass through under Prometheus-safe names, ``bucket_bytes`` lists
+    collapse to their sum, strings and other structure are dropped."""
+    out = {}
+    for k, v in info.items():
+        if isinstance(v, bool):
+            continue
+        if isinstance(v, (int, float)):
+            out[k] = float(v)
+        elif k == "bucket_bytes" and isinstance(v, (list, tuple)):
+            out["bucket_bytes_total"] = float(sum(v))
+    return out

@@ -148,6 +148,21 @@ def main():
     ap.add_argument("--process-index", type=int, default=None)
     ap.add_argument("--process-count", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--trace-dir", default=None,
+                    help="write a Perfetto-loadable span timeline to "
+                         "<dir>/trace-<pidx>.json: per-step data-wait/"
+                         "dispatch/ckpt/journal lanes plus per-worker "
+                         "batch-fetch lanes (docs/observability.md)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append a metrics-registry snapshot line per "
+                         "log window (and a final one) to this file")
+    ap.add_argument("--straggler-every", type=int, default=0,
+                    help="every N steps allgather per-rank phase times "
+                         "and warn '[straggler] rank=...' when one rank "
+                         "exceeds --straggler-ratio x median (0 = off)")
+    ap.add_argument("--straggler-ratio", type=float, default=2.0,
+                    help="straggler threshold as a multiple of the "
+                         "cross-rank median phase time")
     args = ap.parse_args()
 
     from repro.configs import default_run_config, get_config, \
@@ -171,6 +186,17 @@ def main():
         else jax.process_index()
     pcount = args.process_count if args.process_count is not None \
         else jax.process_count()
+
+    # observability: install the tracer BEFORE the pipeline/loop exist so
+    # loader workers pick it up; the registry always rides along (it is
+    # only written out when --metrics-jsonl is given)
+    from repro.observability import MetricsRegistry, Tracer, set_tracer
+
+    tracer = None
+    if args.trace_dir or args.straggler_every:
+        tracer = Tracer(process_index=pidx)
+        set_tracer(tracer)
+    registry = MetricsRegistry()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -386,7 +412,10 @@ def main():
                      if (args.ckpt or args.ckpt_dir) else 0,
                      keep_last_k=args.keep_last_k, pin_steps=pins,
                      process_index=pidx, process_count=pcount,
-                     journal=journal)
+                     journal=journal,
+                     metrics=registry, metrics_jsonl=args.metrics_jsonl,
+                     straggler_every=args.straggler_every,
+                     straggler_ratio=args.straggler_ratio)
     print(f"[train] {cfg.name}: {model.cfg.n_layers}L d={cfg.d_model} "
           f"on {n_dev} device(s), mesh {dict(mesh.shape)}, "
           f"steps {start_step}->{args.steps}")
@@ -405,6 +434,18 @@ def main():
           f"compiles={t['n_traces']:.0f} "
           f"grad_sync={t['grad_sync']}/{t['grad_buckets']}bkt/"
           f"{t['grad_comm_bytes']/1e6:.1f}MB")
+    if args.straggler_every and loop.last_straggler_reports:
+        last = loop.last_straggler_reports[-1]["summary"]
+        worst = max(last.items(), key=lambda kv: kv[1]["imbalance"])
+        print(f"[straggler] checks={len(loop.last_straggler_reports)} "
+              f"worst_phase={worst[0]} "
+              f"imbalance={worst[1]['imbalance']:.2f}x")
+    if args.metrics_jsonl:
+        print(f"[metrics] wrote {args.metrics_jsonl}")
+    if tracer is not None and args.trace_dir:
+        path = tracer.flush(args.trace_dir)
+        print(f"[trace] wrote {path} ({len(tracer)} events, "
+              f"{tracer.dropped} dropped) — open in ui.perfetto.dev")
     print("[done]")
 
 

@@ -1,0 +1,35 @@
+"""Unified observability: span tracing, a typed metrics registry, and
+cross-host straggler detection.
+
+Three dependency-free layers (see ``docs/observability.md``):
+
+* :mod:`repro.observability.trace` — per-process ring-buffered spans
+  flushed as Chrome-trace/Perfetto JSON (``trace-<pidx>.json``).
+* :mod:`repro.observability.metrics` — counters / gauges / fixed-bucket
+  histograms with JSONL and Prometheus-textfile exporters.
+* :mod:`repro.observability.aggregate` — every-K-steps cross-host
+  phase-time allgather with ``[straggler] rank=...`` detection.
+
+Install a tracer process-wide with :func:`set_tracer`; instrumented
+code (``TrainLoop``, the data loaders, ``PagedServeEngine``) reads it
+via :func:`get_tracer` and pays a no-op when tracing is off.
+"""
+from repro.observability.aggregate import (PHASES,  # noqa: F401
+                                           StragglerMonitor,
+                                           allgather_phase_times,
+                                           find_stragglers,
+                                           summarize_phases)
+from repro.observability.metrics import (DECODE_BUCKETS_MS,  # noqa: F401
+                                         STEP_TIME_BUCKETS_MS,
+                                         TTFT_BUCKETS_MS, Counter, Gauge,
+                                         Histogram, MetricsRegistry)
+from repro.observability.trace import (NULL_TRACER, NullTracer,  # noqa: F401
+                                       Tracer, get_tracer, set_tracer)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "get_tracer", "set_tracer",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "STEP_TIME_BUCKETS_MS", "TTFT_BUCKETS_MS", "DECODE_BUCKETS_MS",
+    "StragglerMonitor", "PHASES", "allgather_phase_times",
+    "summarize_phases", "find_stragglers",
+]

@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.configs.base import MAMBA, RunConfig
 from repro.models.model import Model
+from repro.observability import (DECODE_BUCKETS_MS, TTFT_BUCKETS_MS,
+                                 MetricsRegistry, get_tracer)
 from repro.serve.cache import alloc_decode_cache, write_prefill_into
 from repro.serve.paged_cache import PagedKVCache, commit_prefill, pages_for
 from repro.serve.scheduler import FifoScheduler, Request
@@ -125,6 +127,13 @@ class PagedServeEngine:
     the true length are never attended — see docs/serving.md); models
     with SSM layers prefill at exact length, because a right-padded
     scan would corrupt the recurrent state.
+
+    Observability: each request is an async trace interval on the
+    ``serve`` lane (submit -> finish) with prefill / commit spans and
+    per-tick ``decode_tick`` spans in between, so TTFT is readable off
+    the trace; ``metrics`` (a fresh registry unless one is shared in)
+    carries TTFT/decode-latency histograms, admission-reject counts and
+    pool-utilization gauges (docs/observability.md).
     """
     model: Model
     run: RunConfig
@@ -135,6 +144,8 @@ class PagedServeEngine:
     max_tokens: Optional[int] = None       # live-token budget (scheduler)
     use_pallas_decode: bool = True
     cache_dtype: Any = jnp.float32
+    tracer: Optional[Any] = None           # None -> process-wide tracer
+    metrics: Optional[MetricsRegistry] = None
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -169,6 +180,15 @@ class PagedServeEngine:
         self._next_rid = 0
         self._step_count = 0
         self._key = jax.random.PRNGKey(0)
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        self._ttft_hist = self.metrics.histogram(
+            "serve_ttft_ms", TTFT_BUCKETS_MS,
+            help="submit to first token")
+        self._decode_hist = self.metrics.histogram(
+            "serve_decode_tick_ms", DECODE_BUCKETS_MS,
+            help="one decode step over all active slots")
+        self._submit_t: Dict[int, float] = {}
 
     # ---- introspection ----------------------------------------------
     def decode_compiles(self) -> int:
@@ -178,6 +198,18 @@ class PagedServeEngine:
 
     def utilization(self) -> float:
         return self.kv.utilization()
+
+    def _tr(self):
+        return self.tracer if self.tracer is not None else get_tracer()
+
+    def _update_gauges(self) -> None:
+        m = self.metrics
+        m.gauge("serve_kv_utilization").set(self.kv.utilization())
+        m.gauge("serve_queue_depth").set(len(self.sched.queue))
+        m.gauge("serve_live_tokens").set(self.sched.live_tokens)
+        m.gauge("serve_active_slots").set(len(self._active))
+        for reason, n in self.sched.rejects.items():
+            m.gauge(f"serve_admission_rejects_{reason}").set(n)
 
     # ---- submission --------------------------------------------------
     def submit(self, tokens: Sequence[int], max_new: int,
@@ -192,6 +224,10 @@ class PagedServeEngine:
         self._next_rid += 1
         self.sched.submit(Request(rid=rid, tokens=list(tokens),
                                   max_new=max_new, arrival=arrival))
+        self._submit_t[rid] = time.perf_counter()
+        self._tr().begin_async("request", rid, "serve",
+                               prompt=len(tokens), max_new=max_new)
+        self.metrics.counter("serve_requests_submitted").inc()
         return rid
 
     # ---- internals ---------------------------------------------------
@@ -207,17 +243,25 @@ class PagedServeEngine:
         return int(jax.random.categorical(sub, logits_row / temperature))
 
     def _admit(self, params, req: Request, temperature: float) -> None:
+        tr = self._tr()
         L = len(req.tokens)
         slot = self.kv.admit(req.total_len)
         Sb = self._bucket(L)
         padded = np.zeros((1, Sb), np.int32)
         padded[0, :L] = req.tokens
-        logits, cache = self._prefill(params, jnp.asarray(padded),
-                                      jnp.int32(L))
+        with tr.span("prefill", "serve", rid=req.rid, tokens=L, bucket=Sb):
+            logits, cache = self._prefill(params, jnp.asarray(padded),
+                                          jnp.int32(L))
         pages = self.kv.slot_pages[slot][:pages_for(L, self.page)]
-        self.kv.pools = self._commit(self.kv.pools, cache, jnp.int32(slot),
-                                     jnp.asarray(pages, jnp.int32))
+        with tr.span("prefill_commit", "serve", rid=req.rid, slot=slot):
+            self.kv.pools = self._commit(self.kv.pools, cache,
+                                         jnp.int32(slot),
+                                         jnp.asarray(pages, jnp.int32))
         tok = self._sample_host(logits[0, -1], temperature)
+        t_sub = self._submit_t.pop(req.rid, None)
+        if t_sub is not None:  # host-visible first token: TTFT
+            self._ttft_hist.observe((time.perf_counter() - t_sub) * 1e3)
+        tr.instant("first_token", "serve", rid=req.rid)
         req.out.append(tok)
         req.slot = slot
         if req.max_new == 1:
@@ -233,25 +277,35 @@ class PagedServeEngine:
         self.kv.release(req.slot)
         self.sched.release(req)
         self._active.pop(req.slot, None)
+        self._tr().end_async("request", req.rid, "serve",
+                             new_tokens=len(req.out))
+        self.metrics.counter("serve_requests_finished").inc()
 
     # ---- the engine loop --------------------------------------------
     def step(self, params, temperature: float = 0.0) -> List[Request]:
         """Admit what fits, run one decode tick, return finished requests."""
         self._step_count += 1
         self._done_now: List[Request] = []
+        tr = self._tr()
         while True:
             req = self.sched.try_admit(self.kv)
             if req is None:
                 break
             self._admit(params, req, temperature)
         if not self._active:
+            self._update_gauges()
             return self._done_now
+        t0 = time.perf_counter()
         logits, self.kv.pools = self._decode(
             params, self.kv.pools,
             jnp.asarray(self._next_tok[:, None]),
             jnp.asarray(self._positions),
             self.kv.tables())
         logits = np.asarray(logits[:, 0])      # (max_slots, V)
+        t1 = time.perf_counter()  # np.asarray forced the tick: host-visible
+        tr.complete("decode_tick", "serve", t0, t1,
+                    active=len(self._active))
+        self._decode_hist.observe((t1 - t0) * 1e3)
         done = self._done_now
         for slot, req in list(self._active.items()):
             tok = (int(np.argmax(logits[slot]))
@@ -263,6 +317,7 @@ class PagedServeEngine:
             if len(req.out) >= req.max_new:
                 self._finish(req)
                 done.append(req)
+        self._update_gauges()
         return done
 
     def serve(self, params, temperature: float = 0.0,

@@ -48,6 +48,10 @@ class FifoScheduler:
         self.max_tokens = max_tokens
         self.queue: Deque[Request] = deque()
         self.live_tokens = 0         # sum of total_len over admitted reqs
+        # admission-reject counts by resource (the head request was
+        # blocked this many admission attempts) — exported as the
+        # serve_admission_rejects_* metric series
+        self.rejects = {"tokens": 0, "kv": 0}
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -62,8 +66,10 @@ class FifoScheduler:
             return None
         req = self.queue[0]
         if self.live_tokens + req.total_len > self.max_tokens:
+            self.rejects["tokens"] += 1
             return None
         if not kv.can_admit(req.total_len):
+            self.rejects["kv"] += 1
             return None
         self.queue.popleft()
         self.live_tokens += req.total_len

@@ -94,6 +94,13 @@ def fault_point(phase: str, step=None) -> None:
         return
     if not _fire_once(phase, step):
         return
+    # mark the trace so a rollback/replay in the timeline has its cause
+    # next to it (armed path only — the disarmed early-out stays one
+    # env lookup with no imports)
+    from repro.observability import get_tracer
+
+    get_tracer().instant("fault_injected", "loop", phase=phase,
+                         step=-1 if step is None else int(step))
     if os.environ.get("REPRO_FAULT_MODE", "exit") == "raise":
         raise TransientWorkerError(
             f"injected transient fault at phase={phase} step={step}")

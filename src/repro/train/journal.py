@@ -40,6 +40,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 
+from repro.observability import get_tracer
 from repro.train import checkpoint as ckpt
 
 __all__ = ["RollbackJournal"]
@@ -109,9 +110,12 @@ class RollbackJournal:
             tree, pstate, manifest = ckpt.restore_sharded(
                 self.dir, like, step=step,
                 process_index=self.process_index)
+            get_tracer().instant("journal_restore", "ckpt",
+                                 step=int(manifest["step"]))
             return tree, pstate, int(manifest["step"])
         for s, flat, subs, pstate in reversed(self._mem):
             if step is None or s == step:
+                get_tracer().instant("journal_restore", "ckpt", step=s)
                 return ckpt.reassemble_tree(flat, subs, like), pstate, s
         raise LookupError(
             f"journal has no entry for step {step} "

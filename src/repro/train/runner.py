@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.configs.base import RunConfig
 from repro.data.device_prefetch import DevicePrefetch
 from repro.models.model import Model
+from repro.observability import STEP_TIME_BUCKETS_MS, get_tracer
 from repro.train import checkpoint as ckpt
 from repro.train.faults import TransientWorkerError, fault_point
 from repro.train.optimizer import AdamWConfig
@@ -59,6 +60,12 @@ class AsyncMetrics:
     (``max_pending``) forces resolution of the oldest entry rather than
     letting unbounded device memory accumulate.  ``drain`` resolves
     everything (end of training).
+
+    Ordering contract: ``poll``/``drain`` yield entries in PUSH order,
+    never readiness order — both only ever pop the deque head, and the
+    forced-resolve pass runs *before* the ready scan so a ready entry
+    behind a slow head is held back until the head resolves.  Consumers
+    (``TrainLog.metrics``) therefore see strictly monotone step order.
     """
 
     def __init__(self, max_pending: int = 8):
@@ -84,10 +91,14 @@ class AsyncMetrics:
 
     def poll(self) -> List[tuple]:
         out = []
-        while self._pending and self._is_ready(self._pending[0][1]):
-            out.append(self._resolve(self._pending.popleft()))
+        # bound the window FIRST: force-resolving the oldest entries
+        # before the ready scan keeps emission in push order by
+        # construction (resolving head entries can only ever extend the
+        # ready prefix, never reorder it)
         while len(self._pending) > self.max_pending:
             self.forced_resolves += 1
+            out.append(self._resolve(self._pending.popleft()))
+        while self._pending and self._is_ready(self._pending[0][1]):
             out.append(self._resolve(self._pending.popleft()))
         return out
 
@@ -456,7 +467,11 @@ class TrainLoop:
                  prefetch_size: int = 2, aot_compile: bool = True,
                  metrics_lag: int = 8,
                  journal=None, max_rollbacks: int = 2,
-                 peak_flops: float = DEFAULT_PEAK_FLOPS):
+                 peak_flops: float = DEFAULT_PEAK_FLOPS,
+                 tracer=None, metrics=None,
+                 metrics_jsonl: Optional[str] = None,
+                 straggler_every: int = 0,
+                 straggler_ratio: float = 2.0):
         """``pin_steps`` lists checkpoint steps ``keep_last_k`` GC must
         never prune — the resume path pins the ``--ckpt-step`` it
         restored from, so the operator's rollback point survives
@@ -470,7 +485,22 @@ class TrainLoop:
         rolls state + data cursor back to the newest journal entry and
         replays — no disk checkpoint is read.  At most ``max_rollbacks``
         recoveries per ``run()``; past that the error propagates (a
-        'transient' fault that keeps firing isn't transient)."""
+        'transient' fault that keeps firing isn't transient).
+
+        Observability (all optional, all off by default):  ``tracer``
+        overrides the process-wide :func:`repro.observability.get_tracer`
+        — every phase the loop already times for stall accounting
+        (data wait, dispatch, metrics resolve, journal snapshot,
+        checkpoint commit, final drain) is recorded as a span with the
+        SAME clock readings, plus a per-iteration ``step`` span and
+        rollback instants.  ``metrics`` is a
+        :class:`~repro.observability.MetricsRegistry` populated with a
+        step-time histogram, per-window throughput gauges and the final
+        telemetry/grad-sync series; ``metrics_jsonl`` appends a registry
+        snapshot per log window.  ``straggler_every`` > 0 runs the
+        cross-host phase allgather every that many steps and logs
+        ``[straggler] rank=...`` when a rank exceeds
+        ``straggler_ratio`` x median (see observability.aggregate)."""
         if ckpt_path and ckpt_dir:
             raise ValueError("pass ckpt_path (flat) or ckpt_dir (sharded), "
                              "not both")
@@ -490,6 +520,11 @@ class TrainLoop:
         self.journal = journal
         self.max_rollbacks = max_rollbacks
         self.peak_flops = peak_flops
+        self.tracer = tracer
+        self.metrics = metrics
+        self.metrics_jsonl = metrics_jsonl
+        self.straggler_every = straggler_every
+        self.straggler_ratio = straggler_ratio
 
     def run(self, data: Iterable[Dict[str, Any]], steps: int, *,
             state=None, seed: int = 0, start_step: int = 0):
@@ -539,7 +574,21 @@ class TrainLoop:
         elif self.ckpt_path and self.async_checkpoint:
             saver = ckpt.AsyncCheckpointer(self.ckpt_path)
 
+        tracer = self.tracer if self.tracer is not None else get_tracer()
+        step_hist = self.metrics.histogram(
+            "train_step_time_ms", STEP_TIME_BUCKETS_MS,
+            help="per-step wall time") if self.metrics is not None else None
+        monitor = None
+        if self.straggler_every:
+            from repro.observability import StragglerMonitor
+
+            monitor = StragglerMonitor(
+                tracer, every=self.straggler_every,
+                ratio=self.straggler_ratio, registry=self.metrics)
+        self.last_straggler_reports = []
+
         blocked = 0.0          # host time spent waiting (stalls)
+        drain_s = 0.0          # end-of-run metric drain (NOT steady stall)
         ema = None
         tokens_per_step = None
         t_start = time.perf_counter()
@@ -578,9 +627,15 @@ class TrainLoop:
             i = start_step
             while i < steps:
                 try:
-                    tw = time.perf_counter()
+                    # t_step0 anchors this iteration's "step" span; every
+                    # blocked component below hands the SAME perf_counter
+                    # readings to tracer.complete, so the trace is
+                    # bit-identical to the stall accounting
+                    t_step0 = tw = time.perf_counter()
                     batch = next(it)
-                    blocked += time.perf_counter() - tw
+                    t1 = time.perf_counter()
+                    blocked += t1 - tw
+                    tracer.complete("data_wait", "data", tw, t1)
 
                     if i == start_step:
                         if tokens_per_step is None:
@@ -590,7 +645,10 @@ class TrainLoop:
                         if self.aot_compile and runner.compiled is None:
                             runner.compile(state, batch)
 
+                    tw = time.perf_counter()
                     state, metrics = runner(state, batch)
+                    tracer.complete("dispatch", "compute", tw,
+                                    time.perf_counter())
                     # the host-kill window: step i dispatched, device
                     # possibly still mid-backward
                     fault_point("step", i)
@@ -622,7 +680,15 @@ class TrainLoop:
                         # blocks on the device — account it as stall time
                         tw = time.perf_counter()
                         resolve_into_log(async_metrics.poll())
-                        blocked += time.perf_counter() - tw
+                        t1 = time.perf_counter()
+                        blocked += t1 - tw
+                        tracer.complete("metrics_resolve", "metrics",
+                                        tw, t1)
+                        if self.metrics is not None:
+                            self.metrics.set_gauges(meta, prefix="train_")
+                            if self.metrics_jsonl:
+                                self.metrics.write_jsonl(
+                                    self.metrics_jsonl, step=i + 1)
 
                     if self.journal is not None:
                         # device->host snapshot of the completed step —
@@ -634,14 +700,32 @@ class TrainLoop:
                             state, i + 1,
                             pipeline.state_at(i + 1)
                             if pipeline is not None else None)
-                        blocked += time.perf_counter() - tw
+                        t1 = time.perf_counter()
+                        blocked += t1 - tw
+                        tracer.complete("journal_snapshot", "ckpt", tw, t1,
+                                        step=i + 1)
 
                     if (self.ckpt_path or self.ckpt_dir) and self.ckpt_every \
                             and (i + 1) % self.ckpt_every == 0:
                         tw = time.perf_counter()
                         write_ckpt(state, i + 1)
-                        blocked += time.perf_counter() - tw
+                        t1 = time.perf_counter()
+                        blocked += t1 - tw
+                        tracer.complete("ckpt_commit", "ckpt", tw, t1,
+                                        step=i + 1)
                         last_saved = i + 1
+
+                    t1 = time.perf_counter()
+                    tracer.complete("step", "loop", t_step0, t1, step=i)
+                    if step_hist is not None and i > start_step:
+                        step_hist.observe(dt * 1e3)
+                    if monitor is not None:
+                        # deterministic schedule: every rank reaches this
+                        # allgather at the same completed-step count
+                        tw = time.perf_counter()
+                        if monitor.maybe_check(i + 1) is not None:
+                            tracer.complete("straggler_check", "comm", tw,
+                                            time.perf_counter(), step=i + 1)
                 except TransientWorkerError:
                     if self.journal is None or pipeline is None \
                             or self.journal.latest() is None \
@@ -649,6 +733,8 @@ class TrainLoop:
                         raise
                     rollbacks += 1
                     from repro.train.train_step import abstract_state
+
+                    tracer.instant("rollback", "loop", step=i)
 
                     like = abstract_state(runner.model, runner.run)
                     tree, jpstate, jstep = self.journal.restore(like)
@@ -664,24 +750,39 @@ class TrainLoop:
                     else:
                         it = iter(pipeline.host_batches())
                     pipeline_loader = pipeline.last_loader
+                    tracer.instant("replay", "loop", from_step=jstep)
                     i = jstep
                     t_iter = time.perf_counter()
                     continue
                 i += 1
 
+            # the end-of-run drain is NOT steady-state stall: it resolves
+            # every still-pending metric window at once, a cost paid once
+            # at exit.  Account it separately (telemetry['drain_s']) so
+            # stall_fraction keeps meaning "host blocked per steady step".
             tw = time.perf_counter()
             resolve_into_log(async_metrics.drain())
+            t_drained = time.perf_counter()
+            drain_s = t_drained - tw
+            tracer.complete("metrics_drain", "metrics", tw, t_drained)
             jax.block_until_ready(state)
+            t_blocked = time.perf_counter()
+            tracer.complete("device_block", "compute", t_drained, t_blocked)
             # steps > start_step: a resumed run that had nothing to do must
             # not rewrite (or mislabel) an existing checkpoint with the
             # restored state under a different step number
-            if (self.ckpt_path or self.ckpt_dir) and last_saved != steps \
-                    and steps > start_step:
+            final_ckpt = (self.ckpt_path or self.ckpt_dir) \
+                and last_saved != steps and steps > start_step
+            if final_ckpt:
                 write_ckpt(state, steps)
             if saver is not None:
                 saver.close()
                 saver = None
-            blocked += time.perf_counter() - tw
+            t1 = time.perf_counter()
+            if final_ckpt:
+                tracer.complete("ckpt_commit", "ckpt", t_blocked, t1,
+                                step=steps)
+            blocked += t1 - t_drained
         finally:
             if saver is not None:  # exception path: still flush the queue
                 saver.close()
@@ -695,6 +796,10 @@ class TrainLoop:
             "total_s": total,
             "host_blocked_s": blocked,
             "stall_fraction": blocked / max(total, 1e-9),
+            # end-of-run metric drain, kept OUT of host_blocked_s /
+            # stall_fraction: it is a one-time exit cost, not per-step
+            # dispatch stall (the train_overlap figure of merit)
+            "drain_s": drain_s,
             "step_time_ema": ema if ema is not None else float("nan"),
             "tokens_per_s": n_steps * (tokens_per_step or 0)
                             / max(total, 1e-9),
@@ -721,6 +826,22 @@ class TrainLoop:
             "act_wire_bytes_per_device":
                 gs.get("act_wire_bytes_per_device", 0.0),
         }
+        if monitor is not None:
+            self.last_straggler_reports = monitor.reports
+        if self.metrics is not None:
+            # telemetry + per-plan comm volume as named series — the
+            # stable surface the autotuner/scrapers consume
+            from repro.distributed import gradsync
+
+            self.metrics.set_gauges(log.telemetry, prefix="train_")
+            self.metrics.set_gauges(gradsync.metric_series(gs),
+                                    prefix="grad_")
+            self.metrics.counter(
+                "train_rollbacks_total",
+                help="journal rollback recoveries").inc(rollbacks)
+            if self.metrics_jsonl:
+                self.metrics.write_jsonl(self.metrics_jsonl, step=steps,
+                                         extra={"final": True})
         return state, log
 
 

@@ -65,3 +65,42 @@ def test_within_threshold_passes():
 def test_missing_row_fails():
     fails, _ = cbr.compare(BASE, BASE[:1])
     assert any("missing" in f for f in fails)
+
+
+# ---------------------------------------------------------------------------
+# meta block: {"meta": ..., "rows": [...]} files vs legacy bare lists
+# ---------------------------------------------------------------------------
+
+
+def test_bench_rows_normalizes_both_formats():
+    assert cbr.bench_rows(BASE) is BASE                 # legacy bare list
+    doc = {"meta": {"git_sha": "abc", "device_count": 8}, "rows": BASE}
+    assert cbr.bench_rows(doc) is BASE                  # meta ignored
+
+
+def test_meta_block_does_not_affect_compare():
+    wrapped = cbr.bench_rows({"meta": {"jax_version": "0.0.0"},
+                              "rows": BASE})
+    fails, report = cbr.compare(wrapped, cbr.bench_rows(BASE))
+    assert not fails and report == cbr.compare(BASE, BASE)[1]
+
+
+def test_trace_overhead_row_parses_only_step_pairs():
+    """The committed BENCH_trace_overhead.json derived string carries
+    ratio/events/dropped fields after the two step times; the parser
+    must take exactly untraced (reference) + traced and skip the rest."""
+    derived = ("step_untraced=22.49ms_traced=22.97ms_ratio=1.021"
+               "_events=931_dropped=0")
+    r = cbr.step_ratios(derived)
+    assert r == {"traced": 22.97 / 22.49}
+
+
+def test_main_accepts_mixed_file_formats(tmp_path, capsys):
+    import json
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text(json.dumps(BASE))
+    wrapped = tmp_path / "wrapped.json"
+    wrapped.write_text(json.dumps({"meta": {"config": "x"}, "rows": BASE}))
+    assert cbr.main([str(legacy), str(wrapped)]) == 0
+    assert cbr.main([str(wrapped), str(legacy)]) == 0
+    assert "no step-time regression" in capsys.readouterr().out

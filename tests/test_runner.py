@@ -266,6 +266,71 @@ def test_async_metrics_bounds_pending_window():
     assert len(out) == 4 and am.forced_resolves == 4  # kept window of 2
 
 
+def test_async_metrics_interleaved_preserves_push_order():
+    """The poll() contract: entries resolve in PUSH order, never around
+    an unready head.  A ready step-3 behind an unready step-2 is held
+    back, so consumers of ``TrainLog.metrics`` see monotone steps."""
+    am = AsyncMetrics(max_pending=10)
+    am.push({"step": 1}, {"loss": np.float32(1.0)})
+    am.push({"step": 2}, {"loss": _NeverReady()})
+    am.push({"step": 3}, {"loss": np.float32(3.0)})   # ready, but queued
+    assert [m["step"] for m, _ in am.poll()] == [1]
+    assert [m["step"] for m, _ in am.drain()] == [2, 3]
+
+
+def test_async_metrics_forced_resolves_keep_push_order():
+    """When the pending window overflows, the forced-resolve pass runs
+    BEFORE the ready scan — the oldest (blocking) entries come out
+    first, so the stream stays in push order even under pressure."""
+    am = AsyncMetrics(max_pending=1)
+    am.push({"step": 1}, {"loss": _NeverReady()})
+    am.push({"step": 2}, {"loss": _NeverReady()})
+    am.push({"step": 3}, {"loss": np.float32(3.0)})
+    assert [m["step"] for m, _ in am.poll()] == [1, 2, 3]
+    assert am.forced_resolves == 2
+
+
+def test_async_metrics_random_interleave_monotone():
+    am = AsyncMetrics(max_pending=3)
+    seen = []
+    for step in range(1, 21):
+        loss = _NeverReady() if step % 3 == 0 else np.float32(step)
+        am.push({"step": step}, {"loss": loss})
+        seen += [m["step"] for m, _ in am.poll()]
+    seen += [m["step"] for m, _ in am.drain()]
+    assert seen == list(range(1, 21))   # strictly monotone, no gaps
+
+
+def test_drain_excluded_from_stall_fraction():
+    """Seed bug: the end-of-run ``drain()`` (waiting out the metrics
+    lag window) was lumped into ``host_blocked_s``, inflating
+    ``stall_fraction`` on short runs.  With a drain forced to take
+    0.25s on an otherwise fast loop, the drain must surface in
+    ``telemetry['drain_s']`` and NOT in the stall accounting."""
+    import repro.train.runner as runner_mod
+
+    class _SlowDrain(AsyncMetrics):
+        def drain(self):
+            time.sleep(0.25)
+            return super().drain()
+
+    model, run, opt = _fixture(d_model=32)
+    runner = StepRunner(model, run, opt, make_host_mesh(1, 1))
+    orig = runner_mod.AsyncMetrics
+    runner_mod.AsyncMetrics = _SlowDrain
+    try:
+        loop = TrainLoop(runner, log_every=4, device_prefetch=False)
+        _, log = loop.run(_batches(), 8)
+    finally:
+        runner_mod.AsyncMetrics = orig
+    t = log.telemetry
+    assert t["drain_s"] >= 0.25
+    # the old accounting would have put the 0.25s sleep in here too
+    assert t["host_blocked_s"] < 0.25, t
+    assert t["stall_fraction"] == pytest.approx(
+        t["host_blocked_s"] / t["total_s"], rel=1e-6)
+
+
 def test_final_log_window_not_inflated():
     """Seed bug: the last log entry divided ``log_every`` steps' samples by
     a window of fewer steps, inflating throughput.  With a loader-bound

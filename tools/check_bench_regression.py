@@ -15,6 +15,11 @@ Rows without multiple step times (equivalence, stall, bubble rows) are
 checked for presence only: a silently vanished row usually means a
 benchmark stopped asserting something.
 
+Both files may be either a bare row list (the original format, still
+used by older committed baselines) or ``{"meta": {...}, "rows": [...]}``
+— the ``meta`` block describes the bench environment and is ignored
+here, since the ratio gate is machine-independent by construction.
+
 Usage:
     python tools/check_bench_regression.py BENCH_grad_overlap.json \\
         fresh-grad-overlap.json [--threshold 0.15]
@@ -34,6 +39,14 @@ from typing import Dict, List, Optional, Tuple
 # "<variant>=<float>ms" pairs; the row format separates fields with
 # '_', which \w would swallow — strip leading underscores from keys
 STEP_PAIR = re.compile(r"(\w+?)=([0-9.]+)ms(?![a-zA-Z])")
+
+
+def bench_rows(doc) -> List[dict]:
+    """Normalize a loaded bench JSON document to its row list: either
+    the legacy bare list or ``{"meta": ..., "rows": [...]}``."""
+    if isinstance(doc, dict):
+        return doc["rows"]
+    return doc
 
 
 def step_ratios(derived: str) -> Optional[Dict[str, float]]:
@@ -94,9 +107,9 @@ def main(argv: List[str]) -> int:
         print(__doc__)
         return 2
     with open(argv[0]) as f:
-        baseline = json.load(f)
+        baseline = bench_rows(json.load(f))
     with open(argv[1]) as f:
-        fresh = json.load(f)
+        fresh = bench_rows(json.load(f))
     fails, report = compare(baseline, fresh, thr)
     for line in report:
         print("  ok  " + line)

@@ -11,7 +11,8 @@ Two checks keep `docs/*.md` + README from rotting:
 
 2. Snippet check (`run_snippets`, CI only — needs the tier-1 jax env):
    every fenced ```python block in docs/parallelism.md,
-   docs/serving.md and docs/resume.md is executed with
+   docs/serving.md, docs/resume.md and docs/observability.md is
+   executed with
    `PYTHONPATH=src` on the CPU backend.  Snippets are specs, not decoration: if the ParallelPlan
    contract, the paged-cache layout or the fallback tables drift, the
    doc fails CI.
@@ -104,7 +105,8 @@ def main() -> int:
     for e in errors:
         print(f"FAIL {e}")
     if "--snippets" in sys.argv[1:]:
-        for name in ("parallelism.md", "serving.md", "resume.md"):
+        for name in ("parallelism.md", "serving.md", "resume.md",
+                     "observability.md"):
             target = os.path.join(ROOT, "docs", name)
             print(f"running fenced python snippets in "
                   f"{os.path.relpath(target, ROOT)}")

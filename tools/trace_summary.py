@@ -1,0 +1,128 @@
+"""Text flame summary + slowest-span listing for trace-*.json files.
+
+Reads one or more Chrome-trace files written by
+``repro.observability.Tracer`` (different hosts' files merge into one
+timeline — timestamps are wall-clock anchored and ``pid`` is the
+process index) and prints:
+
+* a per-span-name aggregation sorted by total time — count, total,
+  mean, max, and percent of the traced wall window (the "text flame"
+  view: where did the time go, by name);
+* the top-N individual slowest spans (which *instance* was the outlier
+  — the straggler step, the cold-cache fetch).
+
+Usage:
+    python tools/trace_summary.py runs/trace/trace-*.json [-n 10]
+    python tools/trace_summary.py runs/trace --by-rank
+
+No dependencies beyond the stdlib, so it runs anywhere the trace files
+land (CI artifact downloads included).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Any, Dict, Iterable, List
+
+
+def load_events(paths: Iterable[str]) -> List[Dict[str, Any]]:
+    """Concatenate the traceEvents of every file (a directory expands
+    to its trace-*.json); accepts both the ``{"traceEvents": [...]}``
+    object form and a bare event list."""
+    events: List[Dict[str, Any]] = []
+    for path in paths:
+        if os.path.isdir(path):
+            events.extend(load_events(
+                sorted(glob.glob(os.path.join(path, "trace-*.json")))))
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        events.extend(doc["traceEvents"] if isinstance(doc, dict)
+                      else doc)
+    return events
+
+
+def spans(events: Iterable[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    return [e for e in events if e.get("ph") == "X"]
+
+
+def wall_window_us(xs: List[Dict[str, Any]]) -> float:
+    if not xs:
+        return 0.0
+    t0 = min(e["ts"] for e in xs)
+    t1 = max(e["ts"] + e["dur"] for e in xs)
+    return t1 - t0
+
+
+def flame_rows(events: Iterable[Dict[str, Any]],
+               by_rank: bool = False) -> List[Dict[str, Any]]:
+    """Aggregate complete spans by name (optionally per rank): count,
+    total/mean/max ms, percent of the traced wall window."""
+    xs = spans(events)
+    wall = wall_window_us(xs)
+    agg: Dict[Any, Dict[str, float]] = {}
+    for e in xs:
+        key = (e.get("pid", 0), e["name"]) if by_rank else e["name"]
+        a = agg.setdefault(key, {"count": 0, "total": 0.0, "max": 0.0})
+        a["count"] += 1
+        a["total"] += e["dur"]
+        a["max"] = max(a["max"], e["dur"])
+    rows = []
+    for key, a in agg.items():
+        rank, name = key if by_rank else (None, key)
+        rows.append({
+            "rank": rank, "name": name, "count": int(a["count"]),
+            "total_ms": a["total"] / 1e3,
+            "mean_ms": a["total"] / a["count"] / 1e3,
+            "max_ms": a["max"] / 1e3,
+            "wall_pct": 100.0 * a["total"] / wall if wall else 0.0,
+        })
+    rows.sort(key=lambda r: -r["total_ms"])
+    return rows
+
+
+def top_spans(events: Iterable[Dict[str, Any]],
+              n: int = 10) -> List[Dict[str, Any]]:
+    return sorted(spans(events), key=lambda e: -e["dur"])[:n]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="flame summary of observability trace files")
+    ap.add_argument("paths", nargs="+",
+                    help="trace-*.json files or directories of them")
+    ap.add_argument("-n", "--top", type=int, default=10,
+                    help="how many slowest individual spans to list")
+    ap.add_argument("--by-rank", action="store_true",
+                    help="aggregate per (rank, span) instead of per span")
+    args = ap.parse_args(argv)
+
+    events = load_events(args.paths)
+    xs = spans(events)
+    if not xs:
+        print("no complete spans found")
+        return 1
+    ranks = sorted({e.get("pid", 0) for e in xs})
+    wall = wall_window_us(xs)
+    print(f"{len(xs)} spans from {len(ranks)} rank(s) "
+          f"{ranks}, wall window {wall/1e3:.1f}ms")
+    print(f"\n{'span':<22}{'rank':>5}{'count':>8}{'total ms':>11}"
+          f"{'mean ms':>10}{'max ms':>10}{'% wall':>8}")
+    for r in flame_rows(events, by_rank=args.by_rank):
+        rank = "-" if r["rank"] is None else str(r["rank"])
+        print(f"{r['name']:<22}{rank:>5}{r['count']:>8}"
+              f"{r['total_ms']:>11.2f}{r['mean_ms']:>10.3f}"
+              f"{r['max_ms']:>10.3f}{r['wall_pct']:>8.1f}")
+    print(f"\ntop {args.top} slowest spans:")
+    for e in top_spans(events, args.top):
+        arg_s = f" {e['args']}" if e.get("args") else ""
+        print(f"  {e['dur']/1e3:9.3f}ms  {e['name']:<20} "
+              f"rank={e.get('pid', 0)} lane={e.get('cat', '?')}{arg_s}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
